@@ -1,0 +1,72 @@
+"""Paper Remark 1: computation time vs straggler tolerance S (trade-off).
+
+Also measures the filling algorithm's iteration count against its paper
+bound (terminates within N_g iterations) and the solver's runtime scaling.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    cyclic_placement,
+    fill_assignment,
+    man_placement,
+    solve_assignment,
+)
+
+PAPER_SPEEDS = np.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0])
+
+
+def run(csv=True):
+    rows = []
+    # Remark 1: c* strictly increases with S (cyclic, paper speeds)
+    p = cyclic_placement(6, 6, 3)
+    cs = []
+    t0 = time.perf_counter()
+    for s in (0, 1, 2):
+        cs.append(solve_assignment(p, PAPER_SPEEDS, stragglers=s).c_star)
+    us = (time.perf_counter() - t0) * 1e6 / 3
+    rows.append(("remark1_c_vs_S", us,
+                 f"S=0:{cs[0]:.4f} S=1:{cs[1]:.4f} S=2:{cs[2]:.4f} "
+                 f"monotone={cs[0] < cs[1] < cs[2]}"))
+
+    # filling algorithm: iterations <= N_g over random instances
+    rng = np.random.default_rng(0)
+    worst_ratio = 0.0
+    t0 = time.perf_counter()
+    trials = 300
+    for _ in range(trials):
+        n_g = int(rng.integers(3, 12))
+        s_tol = int(rng.integers(0, min(3, n_g - 1) + 1))
+        L = 1 + s_tol
+        for _ in range(50):
+            mu = rng.dirichlet(np.ones(n_g)) * L
+            if mu.max() <= 1:
+                break
+        else:
+            mu = np.full(n_g, L / n_g)
+        ta = fill_assignment(mu, list(range(n_g)), stragglers=s_tol)
+        worst_ratio = max(worst_ratio, ta.n_sets / n_g)
+    us = (time.perf_counter() - t0) * 1e6 / trials
+    rows.append(("filling_iterations_bound", us,
+                 f"max F_g/N_g over {trials} random instances = {worst_ratio:.2f} "
+                 f"(paper bound: <= 1)"))
+
+    # solver runtime scaling (planning cost at fleet scale)
+    for n in (16, 64, 256):
+        p = cyclic_placement(n, 2 * n, 4)
+        s = rng.exponential(1.0, n) + 0.05
+        t0 = time.perf_counter()
+        solve_assignment(p, s, stragglers=1, lexicographic=False)
+        dt = time.perf_counter() - t0
+        rows.append((f"solver_runtime_N{n}", dt * 1e6, f"{dt * 1e3:.1f} ms"))
+
+    if csv:
+        for name, us_, derived in rows:
+            print(f"{name},{us_:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Perf-iteration probe: lower one cell with config overrides, print the
+roofline terms + collective breakdown. The §Perf hillclimb loop drives this.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch nemotron-4-15b \\
+      --shape train_4k --set attn_chunk=2048 --set act_shard_axis=
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def probe(arch: str, shape: str, overrides: dict, multi=False, devices="256"):
+    os.environ.setdefault("REPRO_DRYRUN_DEVICES", devices)
+    import repro.launch.dryrun  # sets XLA_FLAGS before jax import
+    import jax
+
+    import repro.launch.dryrun as D
+    from repro.launch import hlo_cost
+    from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, memory_bytes_model
+
+    # Patch the config the cell builder sees.
+    import dataclasses
+
+    from repro.configs import registry
+
+    orig_get = registry.get_config
+
+    def patched(name):
+        cfg = orig_get(name)
+        if name == arch and overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return cfg
+
+    registry.get_config = patched
+    import repro.configs as C
+
+    C.get_config = patched
+    D.__dict__["build_cell"].__globals__  # noqa: keep reference
+
+    fn, args, meta = D.build_cell(arch, shape, multi)
+    mesh = meta.pop("_mesh")
+    import contextlib
+
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    sc = hlo_cost.analyze(txt, default_trips=meta.get("avg_trips", 1.0))
+    infl = D.cpu_bf16_inflation_bytes(txt)
+    peak = mem.argument_size_in_bytes + mem.temp_size_in_bytes
+    rec = {
+        "flops_per_device": sc.flops,
+        "collective_total": sc.collective_bytes,
+        "collective_bytes_per_device": {k: int(v) for k, v in sc.collectives.items()},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": peak,
+            "cpu_bf16_inflation_bytes": infl,
+            "peak_bytes_tpu": peak - infl,
+        },
+        "meta": meta,
+        "devices": 512 if multi else 256,
+        "model_flops_per_device": (
+            {"train": 6.0, "prefill": 2.0, "decode": 2.0}[meta["kind"]]
+            * meta["n_active_params"] * meta["tokens_global"] / (512 if multi else 256)
+        ),
+    }
+    compute = sc.flops / PEAK_FLOPS
+    memory = memory_bytes_model(rec) / HBM_BW
+    coll = sc.collective_bytes / LINK_BW
+    dom = max(compute, memory, coll)
+    frac = rec["model_flops_per_device"] / PEAK_FLOPS / dom if dom else 0
+    out = {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "compute_s": round(compute, 3), "memory_s": round(memory, 3),
+        "collective_s": round(coll, 3),
+        "dominant": ["compute", "memory", "collective"][[compute, memory, coll].index(dom)],
+        "roofline_fraction": round(frac, 4),
+        "collectives_GB": {k: round(v / 1e9, 1) for k, v in sc.collectives.items()},
+        "peak_tpu_GiB": round((peak - infl) / 2 ** 30, 2),
+    }
+    print(json.dumps(out))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (typed by eval)")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v == "":
+            overrides[k] = ""
+        else:
+            try:
+                overrides[k] = eval(v)  # noqa: S307 - dev tool
+            except Exception:
+                overrides[k] = v
+    probe(args.arch, args.shape, overrides, multi=args.multi)
+
+
+if __name__ == "__main__":
+    main()

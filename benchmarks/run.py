@@ -1,0 +1,47 @@
+"""Benchmark harness — one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per line. Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` uses the paper's exact sizes (5000 Monte-Carlo draws, 6000-dim
+power iteration); the default is a fast pass with identical semantics.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_paper_examples,
+        bench_placements,
+        bench_power_iteration,
+        bench_straggler_tradeoff,
+        bench_transition_waste,
+        roofline,
+    )
+
+    t0 = time.time()
+    print("# --- paper §III examples (Fig. 1 / Fig. 3) ---")
+    bench_paper_examples.run()
+    print("# --- paper Fig. 2 / Table I: placement Monte-Carlo ---")
+    bench_placements.run(draws=5000 if args.full else 1000)
+    print("# --- paper Remark 1 + filling algorithm + solver scaling ---")
+    bench_straggler_tradeoff.run()
+    print("# --- paper §V Fig. 4: power iteration on heterogeneous workers ---")
+    bench_power_iteration.run(dim=6000 if args.full else 600)
+    print("# --- extension: transition-waste-averse re-planning (ref [2] metric) ---")
+    bench_transition_waste.run()
+    print("# --- roofline (from the multi-pod dry-run artifacts) ---")
+    roofline.run()
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

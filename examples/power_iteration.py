@@ -1,0 +1,38 @@
+"""The paper's §V application: distributed power iteration under USEC.
+
+A symmetric matrix is row-partitioned onto 6 heterogeneous workers
+(repetition placement); every iteration the adaptive scheduler (Algorithm 1)
+re-plans the row assignment from the EWMA speed estimates, workers compute
+their row blocks, and the master combines first-arrival results. Latency
+follows the paper's model; the eigenvector math is exact.
+
+Run:  PYTHONPATH=src python examples/power_iteration.py
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.bench_power_iteration import EC2_SPEEDS, power_iteration  # noqa: E402
+
+DIM = 1200
+ITERS = 30
+
+rng = np.random.default_rng(0)
+A = rng.normal(size=(DIM, DIM))
+X = (A + A.T) / 2 + DIM * 0.05 * np.eye(DIM)
+
+print(f"power iteration on a {DIM}x{DIM} matrix, 6 workers, speeds={EC2_SPEEDS}")
+for hetero in (False, True):
+    t, nmse = power_iteration(X, ITERS, hetero=hetero, n_stragglers=0, dim=DIM,
+                              speeds=EC2_SPEEDS)
+    tag = "heterogeneous (Algorithm 1)" if hetero else "homogeneous baseline  "
+    print(f"  {tag}: total latency {t[-1]:7.3f}  NMSE {nmse[-1]:.2e}")
+
+t_hom, _ = power_iteration(X, ITERS, hetero=False, n_stragglers=0, dim=DIM,
+                           speeds=EC2_SPEEDS)
+t_het, _ = power_iteration(X, ITERS, hetero=True, n_stragglers=0, dim=DIM,
+                           speeds=EC2_SPEEDS)
+print(f"latency gain: {100 * (1 - t_het[-1] / t_hom[-1]):.1f}%  (paper reports ~20%)")

@@ -1,0 +1,17 @@
+"""Batched serving with prefill + decode on a sub-quadratic arch.
+
+Serves a reduced mamba2-370m (constant-state decode — the family for which
+the 500k-context cell runs) with greedy decoding, demonstrating the
+prefill -> cache-restage -> decode-loop path the dry-run lowers at scale.
+
+Run:  PYTHONPATH=src python examples/straggler_serving.py
+"""
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main([
+        "--arch", "mamba2-370m", "--reduced",
+        "--batch", "8", "--prompt-len", "48", "--gen-len", "24",
+        "--temperature", "0.8",
+    ])

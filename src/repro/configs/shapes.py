@@ -1,0 +1,84 @@
+"""Input specs per (architecture x shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input — weak-type-correct, shardable, zero allocation — which is what the
+multi-pod dry-run lowers against. ``demo_batch`` materializes tiny concrete
+batches of the same schema for CPU smoke tests.
+
+Modality frontends are stubs by assignment: ``[audio]`` supplies precomputed
+conv-frame embeddings, ``[vlm]`` supplies precomputed ViT patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import ArchConfig, ShapeConfig
+
+
+def batch_schema(cfg: ArchConfig, kind: str, batch: int, seq: int) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """{name: (shape, dtype)} for the model-input batch."""
+    if cfg.frontend == "audio_frames":
+        d = {"frames": ((batch, seq, cfg.frontend_dim), jnp.float32)}
+        if kind == "train":
+            d["labels"] = ((batch, seq), jnp.int32)
+        return d
+    if cfg.frontend == "vision_patches":
+        p = min(cfg.prefix_len, max(seq // 4, 1))
+        return {
+            "patches": ((batch, p, cfg.frontend_dim), jnp.float32),
+            "tokens": ((batch, seq - p), jnp.int32),
+        }
+    return {"tokens": ((batch, seq), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, batch: int = None, seq: int = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    b = batch if batch is not None else shape.global_batch
+    s = seq if seq is not None else shape.seq_len
+    schema = batch_schema(cfg, shape.kind, b, s)
+    return {k: jax.ShapeDtypeStruct(shp, dt) for k, (shp, dt) in schema.items()}
+
+
+def demo_batch(cfg: ArchConfig, kind: str, batch: int, seq: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Concrete tiny batch with the same schema (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shp, dt) in batch_schema(cfg, kind, batch, seq).items():
+        if dt == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, size=shp), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=shp).astype(np.float32))
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """The per-step decode inputs (the cache specs come from cache_specs)."""
+    return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """abstract cache pytree via eval_shape (no allocation)."""
+    from repro.models.transformer import init_cache
+
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def micro_batch_size(cfg: ArchConfig, shape: ShapeConfig, n_workers: int) -> int:
+    """Samples per micro-step per data-parallel worker (grad accumulation).
+
+    Sized so one microbatch's activations fit HBM next to params: target
+    tokens/microbatch scales inversely with d_model (empirically calibrated
+    against the dry-run memory_analysis; see EXPERIMENTS.md §Dry-run).
+    """
+    per_worker = max(shape.global_batch // n_workers, 1)
+    if getattr(cfg, "microbatch_tokens", 0):
+        target_tokens = max(cfg.microbatch_tokens, shape.seq_len)
+    else:
+        target_tokens = max(int(2 ** 22 / max(cfg.d_model, 1)), shape.seq_len)
+    mb = max(target_tokens // shape.seq_len, 1)
+    return min(mb, per_worker)

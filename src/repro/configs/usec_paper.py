@@ -1,0 +1,14 @@
+"""The paper's own experimental setup (§III, §V).
+
+N=6 workers, G=6 sub-matrices, J=3 replication, speed vector
+s=[1,2,4,8,16,32]; 6000x6000 matrix for power iteration (§V).
+"""
+
+import numpy as np
+
+N_MACHINES = 6
+N_TILES = 6
+REPLICATION = 3
+SPEEDS = np.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0])
+MATRIX_DIM = 6000
+PLACEMENTS = ("repetition", "cyclic", "man")

@@ -1,0 +1,166 @@
+"""The filling algorithm (paper Algorithm 2) and the homogeneous cyclic design.
+
+Given the optimal fractional load column ``mu*_g`` for one sub-matrix
+(``sum_n mu*_g[n] = 1 + S``, ``0 <= mu*_g[n] <= 1``), Algorithm 2 constructs an
+*integral* computation assignment: ``F_g`` disjoint row fractions
+``alpha_{g,1..F_g}`` (summing to 1) and machine groups ``P_{g,f}`` with
+``|P_{g,f}| = 1 + S`` such that machine ``n``'s total assigned fraction equals
+``mu*_g[n]`` exactly. Every row is then computed by exactly ``1 + S`` distinct
+machines, which is what makes the step recoverable under any ``S`` stragglers.
+
+Invariant maintained by the alpha rule (Lemma 1 of [Woolsey-Chen-Ji, TCOM'21]):
+``max_n m[n] <= sum(m) / L`` with ``L = 1 + S``, which guarantees the greedy
+peel always completes within ``N_g`` iterations.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+_ZERO = 1e-12
+
+
+@dataclass(frozen=True)
+class TileAssignment:
+    """Integral assignment for one sub-matrix/tile g.
+
+    Attributes:
+      fractions: (F,) row fractions alpha_f, summing to 1.
+      groups: length-F tuple; groups[f] = machine ids (global) computing row
+        set f. Each has exactly ``1 + S`` distinct machines.
+    """
+
+    fractions: np.ndarray
+    groups: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def n_sets(self) -> int:
+        return len(self.groups)
+
+    def load_of(self, machine: int) -> float:
+        return float(
+            sum(a for a, p in zip(self.fractions, self.groups) if machine in p)
+        )
+
+
+def fill_assignment(
+    mu_g: Sequence[float],
+    machines: Sequence[int],
+    stragglers: int = 0,
+) -> TileAssignment:
+    """Run Algorithm 2 on one sub-matrix's load column.
+
+    Args:
+      mu_g: loads over the holder machines of this tile (dense over
+        ``machines``), with ``sum(mu_g) == 1 + stragglers`` and entries in
+        [0, 1].
+      machines: global machine ids aligned with ``mu_g``.
+      stragglers: S.
+
+    Returns:
+      TileAssignment with exact per-machine loads.
+    """
+    m = np.asarray(mu_g, dtype=np.float64).copy()
+    ids = list(machines)
+    if m.ndim != 1 or len(ids) != m.size:
+        raise ValueError("mu_g and machines must align")
+    L = 1 + int(stragglers)
+    total = float(m.sum())
+    if abs(total - L) > 1e-6:
+        raise ValueError(f"sum(mu_g) = {total} != 1+S = {L}")
+    if np.any(m < -_ZERO) or np.any(m > 1 + 1e-9):
+        raise ValueError("mu_g entries must lie in [0, 1]")
+    m = np.clip(m, 0.0, 1.0)
+
+    fractions: List[float] = []
+    groups: List[Tuple[int, ...]] = []
+    # Guard: the invariant needs max <= sum/L.
+    if m.max() > m.sum() / L + 1e-9:
+        raise ValueError("filling precondition violated: max(mu_g) > (1+S)^{-1} sum")
+
+    for _ in range(m.size + 1):
+        nz = np.flatnonzero(m > _ZERO)
+        if nz.size == 0:
+            break
+        n_prime = nz.size
+        if n_prime < L:
+            raise RuntimeError(
+                f"filling failed: {n_prime} non-zero loads < group size {L}"
+            )
+        l_prime = float(m[nz].sum())
+        order = nz[np.argsort(m[nz], kind="stable")]  # ascending
+        # P = smallest + (L-1) largest  (all of them when n_prime == L)
+        group_idx = [order[0]] + list(order[n_prime - L + 1:]) if L > 1 else [order[0]]
+        group_idx = list(dict.fromkeys(int(i) for i in group_idx))  # dedupe, keep order
+        if len(group_idx) != L:  # pragma: no cover - only on degenerate ties
+            raise RuntimeError("filling produced a malformed group")
+        if n_prime >= L + 1:
+            kth_largest_excl = float(m[order[n_prime - L]])  # ell[N'-L+1]
+            alpha = min(l_prime / L - kth_largest_excl, float(m[order[0]]))
+        else:
+            alpha = float(m[order[0]])
+        alpha = max(alpha, 0.0)
+        if alpha <= _ZERO:
+            # Numerical stall: force-zero the smallest element.
+            m[order[0]] = 0.0
+            continue
+        for i in group_idx:
+            m[i] -= alpha
+        m[np.abs(m) < _ZERO] = 0.0
+        fractions.append(alpha)
+        groups.append(tuple(sorted(ids[i] for i in group_idx)))
+    else:  # pragma: no cover
+        raise RuntimeError("filling did not terminate within N_g iterations")
+
+    fr = np.asarray(fractions)
+    # Exactness: fractions must sum to 1 (each row computed once per group).
+    if abs(fr.sum() - 1.0) > 1e-7:
+        raise RuntimeError(f"filling fractions sum to {fr.sum()}, expected 1")
+    fr = fr / fr.sum()
+    return TileAssignment(fr, tuple(groups))
+
+
+def homogeneous_assignment(
+    machines: Sequence[int],
+    stragglers: int = 0,
+) -> TileAssignment:
+    """Cyclic equal-split design for homogeneous speeds (paper §IV).
+
+    ``F_g = N_g`` equal row sets; set ``f`` is computed by machines
+    ``{f, f+1, ..., f+S} (mod N_g)`` in the sorted holder order.
+    """
+    ids = sorted(int(x) for x in machines)
+    n_g = len(ids)
+    L = 1 + int(stragglers)
+    if n_g < L:
+        raise ValueError(f"{n_g} holders < 1+S={L}")
+    fractions = np.full(n_g, 1.0 / n_g)
+    groups = tuple(
+        tuple(sorted(ids[(f + j) % n_g] for j in range(L))) for f in range(n_g)
+    )
+    return TileAssignment(fractions, groups)
+
+
+def verify_assignment(
+    assign: TileAssignment,
+    mu_g: Sequence[float],
+    machines: Sequence[int],
+    stragglers: int = 0,
+    tol: float = 1e-6,
+) -> None:
+    """Assert the Algorithm-2 output realizes mu_g exactly. Raises on failure."""
+    L = 1 + int(stragglers)
+    if abs(float(np.sum(assign.fractions)) - 1.0) > tol:
+        raise AssertionError("fractions do not sum to 1")
+    for f, p in enumerate(assign.groups):
+        if len(set(p)) != L:
+            raise AssertionError(f"group {f} is not {L} distinct machines: {p}")
+    for mid, target in zip(machines, mu_g):
+        got = assign.load_of(int(mid))
+        if abs(got - float(target)) > tol:
+            raise AssertionError(
+                f"machine {mid}: realized load {got} != mu {float(target)}"
+            )

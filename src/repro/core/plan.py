@@ -1,0 +1,257 @@
+"""Turn fractional USEC assignments into executable, padded tile plans.
+
+The planning pipeline per time step is
+
+    Placement  +  speeds  --(assignment.py LP)-->  mu*  --(filling.py)-->
+    {alpha_{g,f}, P_{g,f}}  --(this module)-->  CompiledPlan
+
+A :class:`CompiledPlan` is plain integer/float arrays, padded to static shapes,
+so the jitted executors never recompile when the plan changes (elasticity,
+speed drift and straggler re-planning are *data*, not *code*).
+
+Terminology: a *tile* is the unit of storage placement (the paper's
+sub-matrix X_g — or a microbatch shard in training); a *segment* is a
+contiguous row range of one tile assigned to a group of ``1 + S`` machines.
+
+Row fractions are integerized by the largest-remainder method at a
+configurable ``row_align`` granularity (TPU kernels want MXU-aligned block
+boundaries; the paper's EC2 setting uses align=1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .assignment import AssignmentSolution
+from .filling import TileAssignment, fill_assignment
+from .placement import Placement
+
+
+@dataclass(frozen=True)
+class Segment:
+    """A contiguous row range of one tile, computed by ``1+S`` machines."""
+
+    tile: int
+    row_start: int  # within the tile
+    row_len: int
+    group: Tuple[int, ...]      # machines computing this segment
+    priority: Tuple[int, ...]   # same machines, combine-priority order
+
+
+@dataclass
+class CompiledPlan:
+    """Padded per-worker arrays consumed by the jitted executors.
+
+    All arrays are over *global machine slots* [0, N): preempted machines are
+    simply workers with ``n_valid == 0``. ``T_max`` is the static per-worker
+    segment capacity (max over workers, padded).
+
+    seg_tile/(seg_start, seg_len): which rows of which tile slot ``t`` of
+      worker ``n`` computes; pads have len 0 and tile -1.
+    n_valid: per-worker live segment count (drives per-worker loop bounds).
+    """
+
+    n_machines: int
+    rows_per_tile: int
+    stragglers: int
+    segments: List[Segment]
+    seg_tile: np.ndarray     # (N, T_max) int32
+    seg_start: np.ndarray    # (N, T_max) int32
+    seg_len: np.ndarray      # (N, T_max) int32
+    seg_id: np.ndarray       # (N, T_max) int32  -> index into ``segments``
+    n_valid: np.ndarray      # (N,) int32
+
+    @property
+    def t_max(self) -> int:
+        return self.seg_tile.shape[1]
+
+    def loads(self) -> np.ndarray:
+        """Per-machine assigned load in tile units (sum of row fractions)."""
+        out = np.zeros(self.n_machines)
+        for seg in self.segments:
+            for n in seg.group:
+                out[n] += seg.row_len / self.rows_per_tile
+        return out
+
+    def include_mask(self, stragglers: Sequence[int] = ()) -> np.ndarray:
+        """(N, T_max) float32: 1.0 where this worker's copy of the segment is
+        the one the combiner uses, given the realized straggler set.
+
+        Emulates the paper's master semantics — for every segment the result
+        comes from the highest-priority *non-straggler* group member (the
+        paper's "first arrival"; our priority order is fastest-finisher-first).
+        Raises if all ``1+S+`` holders of some segment straggled (more
+        stragglers than the plan tolerates).
+        """
+        bad = set(int(x) for x in stragglers)
+        mask = np.zeros(self.seg_tile.shape, dtype=np.float32)
+        winner: Dict[int, int] = {}
+        for sid, seg in enumerate(self.segments):
+            w = next((n for n in seg.priority if n not in bad), None)
+            if w is None:
+                raise RuntimeError(
+                    f"segment {sid} (tile {seg.tile}) lost all of {seg.priority}; "
+                    f"straggler set {sorted(bad)} exceeds tolerance S={self.stragglers}"
+                )
+            winner[sid] = w
+        for n in range(self.n_machines):
+            for t in range(self.t_max):
+                sid = int(self.seg_id[n, t])
+                if sid >= 0 and winner.get(sid) == n:
+                    mask[n, t] = 1.0
+        return mask
+
+    def rows_of(self, machine: int) -> Set[int]:
+        """Global row ids (tile * rows_per_tile + r) machine computes."""
+        out: Set[int] = set()
+        for seg in self.segments:
+            if machine in seg.group:
+                base = seg.tile * self.rows_per_tile
+                out |= set(range(base + seg.row_start, base + seg.row_start + seg.row_len))
+        return out
+
+
+def integerize_fractions(
+    fractions: np.ndarray, rows: int, align: int = 1
+) -> np.ndarray:
+    """Largest-remainder split of ``rows`` into len(fractions) integer sizes.
+
+    With ``align > 1`` the split happens in units of ``align`` rows and the
+    remainder rows go to the largest fraction (kernel-friendly boundaries).
+    """
+    f = np.asarray(fractions, dtype=np.float64)
+    if abs(f.sum() - 1.0) > 1e-6:
+        raise ValueError("fractions must sum to 1")
+    units = rows // align
+    rem = rows - units * align
+    raw = f * units
+    base = np.floor(raw).astype(np.int64)
+    short = units - int(base.sum())
+    if short > 0:
+        order = np.argsort(-(raw - base), kind="stable")
+        base[order[:short]] += 1
+    sizes = base * align
+    if rem > 0:
+        # Tail remainder goes to the LAST non-empty part so every segment
+        # start stays align-multiple (kernel-friendly boundaries).
+        nz = np.flatnonzero(sizes)
+        idx = int(nz[-1]) if nz.size else int(np.argmax(f))
+        sizes[idx] += rem
+    assert sizes.sum() == rows
+    return sizes
+
+
+def compile_plan(
+    placement: Placement,
+    solution: AssignmentSolution,
+    rows_per_tile: int,
+    stragglers: int = 0,
+    speeds: Optional[Sequence[float]] = None,
+    row_align: int = 1,
+    t_max: Optional[int] = None,
+) -> CompiledPlan:
+    """Run the filling algorithm per tile and pack the padded plan arrays.
+
+    Args:
+      placement: the *full* placement (plan columns index global machines).
+      solution: output of :func:`assignment.solve_assignment` (already
+        restricted to the available machines).
+      rows_per_tile: q/G — rows (or samples) per tile.
+      stragglers: S.
+      speeds: used only to order each group's combine priority
+        (fastest-finisher first); defaults to machine-id order.
+      row_align: integerization granularity.
+      t_max: pad the per-worker segment capacity to at least this (lets a
+        long-running job keep one static shape across re-plans).
+    """
+    N = placement.n_machines
+    avail = set(solution.machines)
+    restricted = placement.restrict(sorted(avail))
+    s = np.ones(N) if speeds is None else np.asarray(speeds, dtype=np.float64)
+
+    segments: List[Segment] = []
+    per_worker: List[List[int]] = [[] for _ in range(N)]
+    for g, holders in enumerate(restricted.holders):
+        hs = list(holders)
+        mu_g = solution.mu[g, hs]
+        ta: TileAssignment = fill_assignment(mu_g, hs, stragglers)
+        sizes = integerize_fractions(ta.fractions, rows_per_tile, row_align)
+        start = 0
+        for f, (size, group) in enumerate(zip(sizes, ta.groups)):
+            if size == 0:
+                continue
+            # Priority: machine expected to finish first = lowest load/speed.
+            loads = solution.loads
+            prio = tuple(
+                sorted(group, key=lambda n: (loads[n] / s[n], n))
+            )
+            sid = len(segments)
+            segments.append(Segment(g, start, int(size), tuple(group), prio))
+            for n in group:
+                per_worker[n].append(sid)
+            start += int(size)
+        if start != rows_per_tile:
+            raise RuntimeError(f"tile {g}: assigned {start} != {rows_per_tile} rows")
+
+    cap = max((len(x) for x in per_worker), default=0)
+    if t_max is not None:
+        if t_max < cap:
+            raise ValueError(f"t_max={t_max} < required capacity {cap}")
+        cap = t_max
+    cap = max(cap, 1)
+
+    seg_tile = np.full((N, cap), -1, dtype=np.int32)
+    seg_start = np.zeros((N, cap), dtype=np.int32)
+    seg_len = np.zeros((N, cap), dtype=np.int32)
+    seg_id = np.full((N, cap), -1, dtype=np.int32)
+    n_valid = np.zeros(N, dtype=np.int32)
+    for n in range(N):
+        for t, sid in enumerate(per_worker[n]):
+            seg = segments[sid]
+            seg_tile[n, t] = seg.tile
+            seg_start[n, t] = seg.row_start
+            seg_len[n, t] = seg.row_len
+            seg_id[n, t] = sid
+        n_valid[n] = len(per_worker[n])
+
+    return CompiledPlan(
+        n_machines=N,
+        rows_per_tile=rows_per_tile,
+        stragglers=stragglers,
+        segments=segments,
+        seg_tile=seg_tile,
+        seg_start=seg_start,
+        seg_len=seg_len,
+        seg_id=seg_id,
+        n_valid=n_valid,
+    )
+
+
+def verify_plan_coverage(plan: CompiledPlan, n_tiles: int,
+                         straggler_sets: Sequence[Sequence[int]] = ((),)) -> None:
+    """Assert every global row is combined exactly once under each straggler
+    set (and that redundancy is exactly 1+S). Raises AssertionError."""
+    for bad in straggler_sets:
+        mask = plan.include_mask(bad)
+        counts = np.zeros(n_tiles * plan.rows_per_tile, dtype=np.int64)
+        for n in range(plan.n_machines):
+            for t in range(plan.t_max):
+                if mask[n, t] > 0:
+                    g = int(plan.seg_tile[n, t])
+                    st = int(plan.seg_start[n, t])
+                    ln = int(plan.seg_len[n, t])
+                    base = g * plan.rows_per_tile
+                    counts[base + st: base + st + ln] += 1
+        if not np.all(counts == 1):
+            missing = int(np.sum(counts == 0))
+            dup = int(np.sum(counts > 1))
+            raise AssertionError(
+                f"coverage broken under stragglers={list(bad)}: "
+                f"{missing} rows missing, {dup} rows duplicated"
+            )
+    for seg in plan.segments:
+        if len(set(seg.group)) != 1 + plan.stragglers:
+            raise AssertionError(f"segment group {seg.group} != 1+S machines")

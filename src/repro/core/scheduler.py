@@ -1,0 +1,151 @@
+"""The adaptive USEC scheduler — paper Algorithm 1, master side.
+
+Per time step:
+
+  1. update the EWMA speed estimate from last step's worker reports,
+  2. read the current available set N_t from the elasticity trace,
+  3. solve the assignment LP (eq. (8)) for the restricted placement,
+  4. run the filling algorithm and compile the padded plan,
+  5. hand the plan (plain arrays) to the execution runtime.
+
+The scheduler is pure host-side numpy; jitted executors consume its plans as
+inputs, so membership/speed changes never recompile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .assignment import AssignmentSolution, solve_assignment
+from .elastic import AvailabilityTrace
+from .placement import Placement
+from .plan import CompiledPlan, compile_plan
+from .speed import SpeedEstimator
+
+
+@dataclass
+class StepPlan:
+    """Everything the runtime needs for one elastic step."""
+
+    step: int
+    available: Tuple[int, ...]
+    speeds: np.ndarray
+    solution: AssignmentSolution
+    plan: CompiledPlan
+
+    @property
+    def c_star(self) -> float:
+        return self.solution.c_star
+
+
+class USECScheduler:
+    """Master-side adaptive scheduler (Algorithm 1)."""
+
+    def __init__(
+        self,
+        placement: Placement,
+        rows_per_tile: int,
+        initial_speeds: Sequence[float],
+        stragglers: int = 0,
+        gamma: float = 0.5,
+        row_align: int = 1,
+        t_max: Optional[int] = None,
+        homogeneous: bool = False,
+        waste_epsilon: float = 0.0,
+    ):
+        """``waste_epsilon > 0`` enables transition-waste-averse re-planning
+        (the metric of [Dau et al., ISIT'20], which the paper cites as [2]):
+        while membership is unchanged and the PREVIOUS assignment is still
+        within ``(1 + eps)`` of the fresh optimum under the drifted speed
+        estimates, the previous plan is reused verbatim — zero rows move.
+        A fresh plan is computed only on membership change or when drift
+        makes the old plan more than ``eps`` suboptimal."""
+        self.placement = placement
+        self.rows_per_tile = int(rows_per_tile)
+        self.stragglers = int(stragglers)
+        self.row_align = int(row_align)
+        self.estimator = SpeedEstimator(initial_speeds, gamma=gamma)
+        self.homogeneous = bool(homogeneous)
+        self.waste_epsilon = float(waste_epsilon)
+        self._prev: Optional[StepPlan] = None
+        self._step = 0
+        # Static per-worker capacity: bound segments/worker so plans keep one
+        # shape across the whole run. Worst case per tile a worker holds, the
+        # filling algorithm emits <= N_g segments, each touching <= 1+S
+        # workers; a safe, tight-enough bound is (tiles stored) * (1+S).
+        if t_max is None:
+            z = placement.storage_sets()
+            t_max = max(len(zn) for zn in z) * (1 + self.stragglers + 1)
+        self.t_max = t_max
+
+    def plan_step(
+        self,
+        available: Sequence[int],
+        measured: Optional[Dict[int, float]] = None,
+    ) -> StepPlan:
+        """Lines 3–7 of Algorithm 1: update speeds, re-plan for N_t."""
+        if measured:
+            self.estimator.update(measured)
+        s_hat = self.estimator.speeds
+        if self.homogeneous:
+            # Baseline mode: ignore measured heterogeneity (the comparison
+            # point in the paper's Fig. 4): plan as if all speeds are equal.
+            s_plan = np.where(s_hat > 0, 1.0, 1.0)
+        else:
+            s_plan = s_hat
+
+        avail_t = tuple(sorted(int(a) for a in available))
+        if (
+            self.waste_epsilon > 0
+            and self._prev is not None
+            and self._prev.available == avail_t
+        ):
+            # Waste-averse path: is the old plan still near-optimal under
+            # the drifted speeds? (One LP solve to get the fresh optimum.)
+            fresh = solve_assignment(
+                self.placement, s_plan, available=available,
+                stragglers=self.stragglers, lexicographic=False,
+            )
+            old_c = self._prev.solution.time_of(s_plan)
+            if old_c <= (1.0 + self.waste_epsilon) * fresh.c_star + 1e-12:
+                self._step += 1
+                reused = StepPlan(
+                    step=self._step, available=avail_t, speeds=s_hat,
+                    solution=self._prev.solution, plan=self._prev.plan,
+                )
+                self._prev = reused
+                return reused
+            solution = solve_assignment(
+                self.placement, s_plan, available=available,
+                stragglers=self.stragglers,
+            )
+        else:
+            solution = solve_assignment(
+                self.placement, s_plan, available=available, stragglers=self.stragglers
+            )
+        plan = compile_plan(
+            self.placement,
+            solution,
+            rows_per_tile=self.rows_per_tile,
+            stragglers=self.stragglers,
+            speeds=s_plan,
+            row_align=self.row_align,
+            t_max=self.t_max,
+        )
+        self._step += 1
+        out = StepPlan(
+            step=self._step,
+            available=avail_t,
+            speeds=s_hat,
+            solution=solution,
+            plan=plan,
+        )
+        self._prev = out
+        return out
+
+    def report(self, loads: Dict[int, float], durations: Dict[int, float]) -> None:
+        """Lines 14–15: ingest worker speed measurements for the next step."""
+        self.estimator.update(self.estimator.measure(loads, durations))

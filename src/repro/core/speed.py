@@ -1,0 +1,49 @@
+"""Adaptive speed estimation (paper Algorithm 1, lines 1, 4, 14).
+
+Workers report per-step measured throughput ``nu[n] = mu[n] / (tau2 - tau1)``
+(load over wall time); the master keeps an exponentially-weighted moving
+average  ``s_hat <- gamma * nu + (1 - gamma) * s_hat``.
+
+Machines that were preempted (or straggled and reported nothing) simply keep
+their previous estimate — exactly the paper's behaviour, since line 4 only
+mixes in measurements that arrived.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+class SpeedEstimator:
+    """EWMA speed tracker over the full machine population [N]."""
+
+    def __init__(self, initial: Sequence[float], gamma: float = 0.5):
+        self._s = np.asarray(initial, dtype=np.float64).copy()
+        if np.any(self._s <= 0):
+            raise ValueError("initial speeds must be strictly positive")
+        if not (0.0 < gamma <= 1.0):
+            raise ValueError("gamma must be in (0, 1]")
+        self.gamma = float(gamma)
+
+    @property
+    def speeds(self) -> np.ndarray:
+        return self._s.copy()
+
+    def update(self, measured: Dict[int, float]) -> np.ndarray:
+        """Mix in per-machine measurements {machine_id: nu}. Returns s_hat."""
+        for n, nu in measured.items():
+            if nu <= 0 or not np.isfinite(nu):
+                continue  # a stalled/absent worker contributes nothing
+            self._s[n] = self.gamma * nu + (1.0 - self.gamma) * self._s[n]
+        return self.speeds
+
+    def measure(self, loads: Dict[int, float], durations: Dict[int, float]) -> Dict[int, float]:
+        """nu[n] = mu[n] / duration[n] for workers that finished."""
+        out = {}
+        for n, mu in loads.items():
+            d = durations.get(n)
+            if d is not None and d > 0 and mu > 0:
+                out[n] = mu / d
+        return out

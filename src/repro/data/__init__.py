@@ -1,0 +1,5 @@
+"""Data substrate: deterministic tile-addressable synthetic pipeline."""
+
+from .pipeline import StagedBatch, TokenPipeline
+
+__all__ = ["StagedBatch", "TokenPipeline"]

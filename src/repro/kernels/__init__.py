@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the USEC framework's compute hot-spots.
+
+  usec_matvec      — block-row matvec (the paper's power-iteration hot loop)
+  flash_attention  — online-softmax attention (32k-prefill hot loop)
+
+``ops`` holds the jitted public wrappers (padding + backend dispatch);
+``ref`` holds the pure-jnp oracles the tests compare against.
+"""
+
+from .ops import flash_attention, usec_matvec
+
+__all__ = ["flash_attention", "usec_matvec"]

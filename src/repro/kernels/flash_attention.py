@@ -1,0 +1,157 @@
+"""Pallas TPU flash-attention kernel (online softmax over KV blocks).
+
+The serving-path hot spot (32k prefill) and the only quadratic op in the
+model zoo. Adapted to TPU per the FlashAttention recurrence: stream KV blocks
+through VMEM, keep the (bq, d) output accumulator and the per-row running
+max/denominator resident, never materialize the (sq, skv) score matrix.
+
+Grid: (batch*heads, sq/bq, skv/bk) with the KV axis innermost, so the
+accumulator for each (batch*head, q-block) completes its reduction before the
+next q-block starts. Blocks are (128, 128) by default — MXU-aligned for both
+bf16 and fp32.
+
+GQA is handled in the index maps (kv head = q head // group), so grouped KV
+is never materialized to the full head count.
+
+Masking supports: causal (decode-aligned: query i sees keys j <= i + skv - sq),
+sliding window (trailing ``window`` keys), and true-length masking for padded
+inputs. Fully-masked KV blocks are skipped via ``pl.when`` on the grid ids —
+on TPU this prunes ~half the FLOPs of causal prefill, matching the kernel's
+cost model in the roofline accounting.
+
+Shapes must be pre-padded to block multiples — ``ops.flash_attention`` pads
+and un-pads. Scratch: m, l: (bq, 1) fp32; acc: (bq, d) fp32, all in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite "minus infinity": keeps exp()/max() NaN-free
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    sq: int, skv: int, bq: int, bk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    offs = skv - sq  # causal alignment: query row r sits at kv position r+offs
+    q_lo = qi * bq + offs          # kv-position of this q-block's first row
+    q_hi = q_lo + bq - 1           # ... and its last row
+    k_lo = ki * bk
+
+    live = k_lo < skv  # block beyond the true kv length: skip
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= (k_lo + bk - 1) >= (q_lo - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < skv  # true-length (padding) mask
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]            # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sq", "skv", "causal", "window", "scale", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention_padded(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    sq: int,
+    skv: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Attention over pre-padded operands.
+
+    q: (b, h, SQ, d); k/v: (b, hk, SKV, d) with block_q | SQ, block_k | SKV and
+    hk | h (GQA). ``sq``/``skv`` are the *true* lengths (<= padded). Returns
+    (b, h, SQ, d) in q's dtype; rows beyond ``sq`` are garbage (caller slices).
+    """
+    b, h, SQ, d = q.shape
+    _, hk, SKV, _ = k.shape
+    if SQ % block_q or SKV % block_k:
+        raise ValueError(f"padded dims must be block multiples: {q.shape}, {k.shape}")
+    if h % hk:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {hk}")
+    group = h // hk
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    # True lengths never exceed padded lengths; causal offset uses true ones.
+    grid = (b * h, SQ // block_q, SKV // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=float(scale), causal=causal, window=window,
+        sq=sq, skv=skv, bq=block_q, bk=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, SQ, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

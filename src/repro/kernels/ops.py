@@ -1,0 +1,100 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * on TPU               -> compiled Pallas kernels
+  * elsewhere (CPU dev)  -> ``interpret=True`` Pallas (exact kernel semantics,
+                            slow — used by the allclose tests), or the pure
+                            jnp reference for fast functional runs.
+
+The wrappers own all padding/unpadding so kernel code only ever sees
+block-aligned shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_padded
+from .usec_matvec import usec_matvec_padded
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def usec_matvec(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_m: int = 256,
+    block_k: int = 512,
+    mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """y = X @ w (fp32 accumulate). x: (m, k); w: (k,) or (k, c).
+
+    mode: "pallas" | "interpret" | "ref" | None (auto: pallas on TPU, ref
+    elsewhere — tests pass "interpret" explicitly).
+    """
+    if mode is None:
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return ref.matvec_ref(x, w)
+    squeeze = w.ndim == 1
+    w2 = w[:, None] if squeeze else w
+    m, k = x.shape
+    bm = min(block_m, _round_up(m, 8))
+    bk = min(block_k, _round_up(k, 128))
+    mp, kp = _round_up(m, bm), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w2, ((0, kp - k), (0, 0)))
+    y = usec_matvec_padded(xp, wp, bm=bm, bk=bk, interpret=(mode == "interpret"))
+    y = y[:m]
+    return y[:, 0] if squeeze else y
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """Softmax attention. q: (b, h, sq, d); k/v: (b, hk, skv, d), hk | h.
+
+    Matches :func:`repro.kernels.ref.attention_ref` (which materializes the
+    full score matrix; this never does).
+    """
+    if mode is None:
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        b, h, sq, d = q.shape
+        hk = k.shape[1]
+        if hk != h:  # broadcast grouped KV for the reference path
+            k = jnp.repeat(k, h // hk, axis=1)
+            v = jnp.repeat(v, h // hk, axis=1)
+        return ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(skv, 128))
+    sqp, skvp = _round_up(sq, bq), _round_up(skv, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    o = flash_attention_padded(
+        qp, kp, vp, sq=sq, skv=skv, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=(mode == "interpret"),
+    )
+    return o[:, :, :sq, :]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical semantics
+(modulo float accumulation order). Tests sweep shapes/dtypes and assert
+allclose between kernel (interpret=True on CPU) and these oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def matvec_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y = X @ w with fp32 accumulation. x: (m, k); w: (k,) or (k, c)."""
+    squeeze = w.ndim == 1
+    w2 = w[:, None] if squeeze else w
+    y = jnp.dot(x.astype(jnp.float32), w2.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return y[:, 0] if squeeze else y
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Softmax attention oracle.
+
+    q: (b, h, sq, d); k/v: (b, h, skv, d). With ``causal``, query i attends to
+    keys j <= i + (skv - sq) (aligned to the *end* of the KV sequence, the
+    decode convention). ``window`` additionally restricts each query to the
+    trailing ``window`` keys. Returns (b, h, sq, d) in q's dtype.
+    """
+    _, _, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

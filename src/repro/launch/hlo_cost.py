@@ -1,0 +1,310 @@
+"""Scan-aware static cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so every lax.scan in the model (layer stacks, chunked attention, chunked
+cross-entropy, grad-accumulation, FSDP per-layer gathers) is invisible
+beyond its first iteration. This module re-derives the three roofline
+inputs from the HLO text itself, multiplying loop bodies by their trip
+counts (``backend_config known_trip_count``; dynamic-trip loops — the USEC
+uneven microbatch loop — fall back to a caller-provided average):
+
+  flops       — 2 * prod(result_dims) * prod(contracting_dims) per dot
+  bytes       — sum over top-level ops of (operands + result) bytes: a
+                materialized-buffer model of HBM traffic (fusion internals
+                stay in registers and are excluded on purpose)
+  collectives — per-kind operand bytes (all-gather/reduce-scatter adjusted
+                by replica-group size), trip-multiplied
+
+All numbers are PER DEVICE (the input is the per-device partitioned module).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        shape = tuple(int(x) for x in dims.split(",")) if dims.strip() else ()
+        out.append((dt, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _type_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # %var -> type str
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_and_rest(s: str) -> Tuple[str, str]:
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return s[: i + 1], s[i + 1:].strip()
+    i = s.find(" ")
+    return s[:i], s[i + 1:].strip()
+
+
+def _parse_operands(rest: str) -> Tuple[str, List[str], str]:
+    """rest = 'opcode(%a, %b), attrs...' -> (opcode, [a, b], attrs)."""
+    i = rest.find("(")
+    opcode = rest[:i].strip()
+    depth = 0
+    j = i
+    for j in range(i, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    args_blob = rest[i + 1: j]
+    attrs = rest[j + 1:]
+    operands = []
+    for tok in re.split(r",\s*(?![^\[{]*[\]}])", args_blob):
+        tok = tok.strip()
+        m = re.search(r"%([\w\.\-]+)\s*$", tok)
+        if m:
+            operands.append(m.group(1))
+    return opcode, operands, attrs
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                cur = _Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        var, rhs = m.group(1), m.group(2)
+        type_str, rest = _split_type_and_rest(rhs)
+        if "(" not in rest:
+            cur.symbols[var] = type_str
+            continue
+        opcode, operands, attrs = _parse_operands(rest)
+        cur.symbols[var] = type_str
+        cur.ops.append(_Op(var, type_str, opcode, operands, attrs))
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    dynamic_whiles: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+        self.dynamic_whiles += other.dynamic_whiles
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _op_traffic(comp: _Computation, op: _Op, comps=None) -> float:
+    """HBM bytes touched by one top-level op (streaming-traffic model for the
+    TPU target).
+
+    Rules (each validated against a hand-computed cell; see EXPERIMENTS.md):
+      * slice-likes touch only the slice, never the (aliased) full operand —
+        else a layer-scan body is charged the whole stacked cache per trip;
+      * in-place updates (dus/scatter, incl. dus-rooted fusions) touch
+        2 x update;
+      * dtype-normalization converts are free (fused on TPU; on CPU they are
+        the float-normalization shadow copies we already discount);
+      * anything else: operands + result (fusion internals are registers).
+    """
+    result = _type_bytes(op.type_str)
+    opnds = [_type_bytes(comp.symbols.get(o, "")) for o in op.operands]
+    oc = op.opcode
+    if oc in ("dynamic-slice", "slice", "gather", "broadcast"):
+        return 2.0 * result
+    if oc == "convert":
+        return 0.0
+    if oc in ("dynamic-update-slice", "scatter"):
+        arrays = sorted(o for o in opnds if o > 128)
+        upd = arrays[0] if len(arrays) >= 2 else (arrays[0] if arrays else 0)
+        if len(arrays) >= 2:
+            upd = arrays[-2]  # largest is the target buffer; next is update
+        return 2.0 * upd
+    if oc in ("fusion", "call") and comps is not None:
+        cm = _CALLS_RE.search(op.attrs) or re.search(r"to_apply=%?([\w\.\-]+)", op.attrs)
+        sub = comps.get(cm.group(1)) if cm else None
+        if sub is not None and sub.ops:
+            root = sub.ops[-1].opcode
+            roots = {o.opcode for o in sub.ops}
+            if root == "dynamic-update-slice" or "dynamic-update-slice" in roots:
+                arrays = sorted(o for o in opnds if o > 128)
+                upd = arrays[-2] if len(arrays) >= 2 else (arrays[0] if arrays else 0)
+                return 2.0 * upd
+            if root == "convert" and len(sub.ops) <= 2:
+                return 0.0  # pure dtype-normalization fusion (CPU shadow)
+            if root in ("dynamic-slice", "slice"):
+                return 2.0 * result
+    return result + sum(opnds)
+
+
+_TRIP_RE = re.compile(r'known_trip_count.{0,6}?[:=].{0,6}?"?n"?[:=\s"]+(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def analyze(text: str, default_trips: float = 1.0) -> Cost:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                bm = _BODY_RE.search(op.attrs)
+                trips = default_trips
+                tm = _TRIP_RE.search(op.attrs)
+                dyn = 0
+                if tm:
+                    trips = float(tm.group(1))
+                else:
+                    dyn = 1
+                if bm:
+                    total.add(comp_cost(bm.group(1)), trips)
+                cm = _COND_RE.search(op.attrs)
+                if cm:
+                    sub = comp_cost(cm.group(1))
+                    total.flops += sub.flops * (trips + 1)
+                total.dynamic_whiles += dyn
+                # the carry is not re-materialized per trip: no callsite bytes
+                continue
+            if oc == "fusion" or oc == "call":
+                cm = _CALLS_RE.search(op.attrs) or re.search(r"to_apply=%?([\w\.\-]+)", op.attrs)
+                if cm:
+                    sub = comp_cost(cm.group(1))
+                    # fusion internals live in registers: take flops and
+                    # collectives, drop internal bytes (the callsite's
+                    # operands + result below ARE the HBM traffic).
+                    total.flops += sub.flops
+                    for k, v in sub.collectives.items():
+                        total.collectives[k] = total.collectives.get(k, 0.0) + v
+                    total.dynamic_whiles += sub.dynamic_whiles
+                # fall through to count the call-site bytes
+            if oc == "dot":
+                res = _type_shapes(op.type_str)
+                res_elems = 1
+                for _, shape in res:
+                    for d in shape:
+                        res_elems *= d
+                lhs_type = comp.symbols.get(op.operands[0], "") if op.operands else ""
+                lhs_shapes = _type_shapes(lhs_type)
+                contract = 1
+                cm = _CDIM_RE.search(op.attrs)
+                if cm and lhs_shapes:
+                    dims = [int(x) for x in cm.group(1).split(",") if x.strip()]
+                    shape = lhs_shapes[0][1]
+                    for d in dims:
+                        if d < len(shape):
+                            contract *= shape[d]
+                total.flops += 2.0 * res_elems * contract
+            if oc.rstrip("-start") in () or any(
+                oc == c or oc == c + "-start" for c in _COLLECTIVES
+            ):
+                kind = oc[:-6] if oc.endswith("-start") else oc
+                nbytes = _type_bytes(op.type_str)
+                g = 1
+                gm = _GROUPS_RE.search(op.attrs)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(op.attrs)
+                    if gl:
+                        g = len([x for x in gl.group(1).split(",") if x.strip()])
+                if kind == "all-gather":
+                    nbytes = nbytes / max(g, 1)
+                elif kind == "reduce-scatter":
+                    nbytes = nbytes * g
+                total.collectives[kind] = total.collectives.get(kind, 0.0) + nbytes
+            if oc not in _SKIP_BYTES_OPS and not oc.endswith("-done"):
+                total.bytes += _op_traffic(comp, op, comps)
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)
+
+
+def analyze_compiled(compiled, default_trips: float = 1.0) -> Cost:
+    return analyze(compiled.as_text(), default_trips=default_trips)

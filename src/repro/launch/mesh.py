@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS before any jax import to get
+512 host devices; smoke tests and benches see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data x model single pod; (2, 16, 16) pod x data x model for
+    the 512-chip two-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_worker_mesh(n_workers: int, n_model: int = 1, devices=None):
+    """Small meshes for CPU tests/examples (worker axis = USEC machines)."""
+    devices = devices if devices is not None else jax.devices()
+    need = n_workers * n_model
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices, have {len(devices)}")
+    if n_model == 1:
+        return jax.make_mesh(
+            (n_workers,), ("data",), devices=devices[:need],
+            axis_types=(jax.sharding.AxisType.Auto,),
+        )
+    return jax.make_mesh(
+        (n_workers, n_model), ("data", "model"), devices=devices[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

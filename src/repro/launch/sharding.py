@@ -1,0 +1,257 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per mesh+mode.
+
+Two training modes (DESIGN.md §6):
+
+  usec — params/optimizer sharded over ``model`` only (+ZeRO-ish fp32 moments
+         also over ``data`` where divisible); the data axis is the *manual*
+         USEC worker axis running uneven grad-accumulation loops. This is the
+         paper's technique as a first-class feature and fits archs <= ~16B.
+  fsdp — GSPMD everywhere: params sharded over (dp_axes, model) (ZeRO-3
+         style per-layer all-gather under scan); USEC enters as per-sample
+         ownership weights. Required for the >=100B archs (qwen1.5-110b,
+         llama4-scout), where per-model-shard replication cannot fit HBM.
+
+All rules are divisibility-guarded: an axis that does not divide the dim is
+dropped (that dim replicated) rather than failing — sharding is a performance
+choice, correctness never depends on it.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _guard(mesh: Mesh, shape, spec_entries):
+    """Drop axes that don't divide their dim or don't exist in the mesh."""
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a not in mesh.axis_names for a in axes):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------- #
+# Parameter rules
+# ---------------------------------------------------------------------- #
+_RULES = [
+    # (path regex, spec entries for the TRAILING dims, fsdp spec entries)
+    (r"\['embed'\]$",          ("model", None),          ("model", "DP")),
+    (r"\['unembed'\]$",        (None, "model"),          ("DP", "model")),
+    (r"\['frontend_proj'\]$",  (None, None),             (None, "model")),
+    (r"\['w(q|k|v)'\]$",       (None, "model"),          ("DP", "model")),
+    (r"\['b(q|k|v)'\]$",       ("model",),               ("model",)),
+    (r"\['wo'\]$",             ("model", None),          ("model", "DP")),
+    (r"\['router'\]$",         (None, None),             (None, None)),
+    # MoE experts: E over model (expert parallelism).
+    (r"\['ffn'\]\['w_(gate|up)'\]$",   ("model", None, None), ("model", "DP", None)),
+    (r"\['ffn'\]\['w_down'\]$",        ("model", None, None), ("model", None, "DP")),
+    # shared expert / dense mlp
+    (r"\['shared'\]\['w_(gate|up)'\]$", (None, "model"),      ("DP", "model")),
+    (r"\['shared'\]\['w_down'\]$",      ("model", None),      ("model", "DP")),
+    (r"\['w_(gate|up)'\]$",    (None, "model"),          ("DP", "model")),
+    (r"\['w_down'\]$",         ("model", None),          ("model", "DP")),
+    # ssm / rglru
+    (r"\['w_in'\]$",           (None, "model"),          ("DP", "model")),
+    (r"\['w_x'\]$",            (None, "model"),          ("DP", "model")),
+    (r"\['w_(a|i)'\]$",        (None, "model"),          (None, "model")),
+    (r"\['w_out'\]$",          ("model", None),          ("model", "DP")),
+    (r"\['conv_w'\]$",         (None, "model"),          (None, "model")),
+    (r"\['(lam|b_a|b_i)'\]$",  ("model",),               ("model",)),
+    (r"\['norm_scale'\]$",     ("model",),               ("model",)),
+]
+
+
+def _moe_mismatch(key: str, cfg) -> bool:
+    return "'ffn'" in key and not cfg.is_moe
+
+
+def spec_for_param(key: str, shape: Tuple[int, ...], cfg, mesh: Mesh) -> P:
+    """PartitionSpec for one param leaf. ``shape`` may carry a leading
+    stacked-layer axis (blocks) which is never sharded."""
+    mode = cfg.train_mode
+    if mode == "dp":
+        # pure data parallelism: params replicated on every chip; the whole
+        # mesh is the USEC worker axis. For <=2B archs this removes the TP
+        # activation reductions entirely (EXPERIMENTS.md §Perf phase 5).
+        return P()
+    dp = dp_axes(mesh)
+    for pat, usec_spec, fsdp_spec in _RULES:
+        if "ffn" in pat and not cfg.is_moe:
+            continue  # expert rules (3-d stacked weights) are MoE-only
+        if not re.search(pat, key):
+            continue
+        raw = fsdp_spec if mode == "fsdp" else usec_spec
+        # dense-mlp w_up etc. rules also match moe expert keys handled above.
+        trailing = len(raw)
+        lead = len(shape) - trailing
+        if lead < 0:
+            continue
+        # NOTE: sharding the stacked LAYER axis over dp was measured WORSE
+        # (70.7 vs 21.7 GiB peak on qwen train; see EXPERIMENTS.md §Perf).
+        entries = [None] * lead + [(dp if e == "DP" else e) for e in raw]
+        return _guard(mesh, shape, entries)
+    return P()  # norms, scalars, biases -> replicated
+
+
+def param_shardings(param_shapes: Any, cfg, mesh: Mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        spec = spec_for_param(key, tuple(leaf.shape), cfg, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(
+    param_shardings_tree: Any, mesh: Mesh, param_shapes: Any = None,
+    axes: Optional[Tuple[str, ...]] = None,
+) -> Any:
+    """Moments follow the params + ZeRO-1: additionally shard each moment
+    over the DP axes on the first still-unsharded divisible dim. The fp32
+    m/v pair is 4x the bf16 params — in usec mode (params model-sharded
+    only) this is the difference between fitting HBM and not. The optimizer
+    update runs outside the manual region, so GSPMD handles the
+    gather/scatter around it."""
+    dp = tuple(axes) if axes else dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def zero1(sharding, shape_leaf):
+        spec = list(sharding.spec)
+        shape = tuple(shape_leaf.shape)
+        spec = spec + [None] * (len(shape) - len(spec))
+        used = set()
+        for e in spec:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        if any(a in used for a in dp):
+            return sharding  # fsdp mode: already dp-sharded
+        for i, (dim, e) in enumerate(zip(shape, spec)):
+            if e is None and dim % dp_size == 0 and dim > 0:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                return NamedSharding(mesh, P(*spec))
+        return sharding
+
+    if param_shapes is None:
+        mv = param_shardings_tree
+    else:
+        mv = jax.tree.map(zero1, param_shardings_tree, param_shapes)
+    return {
+        "m": mv,
+        "v": mv,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# Batch / cache rules
+# ---------------------------------------------------------------------- #
+def batch_shardings(batch_specs: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Global batch arrays: leading batch dim over the DP axes."""
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        entries = [dp] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, _guard(mesh, v.shape, entries))
+    return out
+
+
+def staged_shardings(staged_specs: Any, mesh: Mesh) -> Any:
+    """USEC staged buffers / plan arrays: leading worker axis over DP axes."""
+    dp = dp_axes(mesh)
+
+    def one(v):
+        entries = [dp] + [None] * (len(v.shape) - 1)
+        return NamedSharding(mesh, _guard(mesh, v.shape, entries))
+
+    return jax.tree.map(one, staged_specs)
+
+
+def cache_shardings(cache_specs_tree: Any, cfg, mesh: Mesh) -> Any:
+    """Decode caches: batch over DP; heads (or head_dim) over model."""
+    dp = dp_axes(mesh)
+    msz = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one_leaf(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        entries: list = [None] * len(shape)
+        # Leaves may carry a leading stacked-layer axis (scan layout), so all
+        # structural dims are indexed from the END.
+        if re.search(r"\['(k|v)'\]$", key) and len(shape) >= 4:
+            # (..., B, slots, hk, hd). Prefer sharding the SLOTS dim over
+            # model (flash-decoding split-K: each shard scores its cache
+            # stripe, softmax combines via collectives) — scales past the
+            # kv-head count and avoids the hd-sharded layout mismatch that
+            # forces involuntary full remat in the attention einsum.
+            entries[-4] = dp
+            if shape[-3] % msz == 0 and shape[-3] >= 4 * msz:
+                entries[-3] = "model"
+            elif shape[-2] % msz == 0:
+                entries[-2] = "model"
+            elif shape[-1] % msz == 0:
+                entries[-1] = "model"
+        elif re.search(r"\['state'\]$", key) and len(shape) >= 4:
+            # (..., B, H, P, N)
+            entries[-4] = dp
+            if shape[-3] % msz == 0:
+                entries[-3] = "model"
+        elif re.search(r"\['conv'\]$", key) and len(shape) >= 3:
+            # (..., B, K-1, C)
+            entries[-3] = dp
+            if shape[-1] % msz == 0:
+                entries[-1] = "model"
+        elif re.search(r"\['h'\]$", key) and len(shape) >= 2:
+            # (..., B, D)
+            entries[-2] = dp
+            if shape[-1] % msz == 0:
+                entries[-1] = "model"
+        else:
+            entries[0] = dp
+        return NamedSharding(mesh, _guard(mesh, shape, entries))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_leaf(p, l) for p, l in flat]
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def guarded(mesh: Mesh, shape: Tuple[int, ...], *entries) -> NamedSharding:
+    """NamedSharding with divisibility-guarded entries (see _guard)."""
+    ent = list(entries) + [None] * (len(shape) - len(entries))
+    return NamedSharding(mesh, _guard(mesh, shape, ent))

@@ -1,0 +1,6 @@
+"""Model zoo substrate: every assigned architecture is a config over this
+one stack (see transformer.py)."""
+
+from .model import ModelBundle, build_model, make_cache, param_count
+
+__all__ = ["ModelBundle", "build_model", "make_cache", "param_count"]

@@ -1,0 +1,287 @@
+"""GQA attention: init, chunked (flash-style) training path, cached decode.
+
+Three execution paths, one semantics (== kernels/ref.attention_ref):
+
+  * ``chunked_attention`` — pure-jnp online-softmax scan over KV blocks.
+    Memory O(chunk) instead of O(skv); this is what long-sequence training
+    and prefill lower to on any backend (and what GSPMD partitions).
+  * ``repro.kernels.ops.flash_attention`` — the Pallas kernel, selected on
+    TPU via ``attn_impl="pallas"``.
+  * plain quadratic einsum — decode (sq == 1) and short sequences.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+from .layers import dense_init, rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = _dt(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    return p
+
+
+def _dt(cfg):
+    from .layers import dtype_of
+
+    return dtype_of(cfg.param_dtype)
+
+
+def qkv(p: Dict, x: jnp.ndarray, cfg, positions: jnp.ndarray):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,Hk,hd), RoPE applied."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    q_chunk: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Online-softmax attention, blocked over BOTH query and KV axes.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, Hk, hd) with Hk | H. ``q_offset`` is the
+    kv-position of q's first row (Skv - Sq for aligned trailing queries).
+    Peak score memory is O(q_chunk * chunk) per (head-group), independent of
+    sequence length — this is what lets 32k prefill compile within HBM.
+    Returns (B, Sq, H, hd).
+
+    Note: the KV scan is full-length with masking, so for causal prefill the
+    compiled FLOPs are ~2x the useful FLOPs (the Pallas kernel prunes masked
+    blocks instead; dynamic-bound loops are a perf-pass option). Tracked in
+    the roofline's MODEL_FLOPS/HLO_FLOPs ratio.
+    """
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    grp = h // hk
+    scale = hd ** -0.5
+    qc = min(q_chunk or chunk, sq)
+    nq = -(-sq // qc)
+    q_pad = nq * qc - sq
+    nkv = -(-skv // chunk)
+    kv_pad = nkv * chunk - skv
+
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    kp = kp.reshape(b, nkv, chunk, hk, hd).transpose(1, 0, 3, 2, 4)  # (n,b,hk,c,hd)
+    vp = vp.reshape(b, nkv, chunk, hk, hd).transpose(1, 0, 3, 2, 4)
+    # (nq, b, hk, grp, qc, hd)
+    qs = qp.reshape(b, nq, qc, hk, grp, hd).transpose(1, 0, 3, 4, 2, 5)
+
+    def one_q_chunk(args):
+        qi, qg = args  # scalar, (b, hk, grp, qc, hd)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def step(carry, blk):
+            m, l, acc, ci = carry
+            kc, vc = blk  # (b, hk, c, hd)
+            s = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", qg.astype(jnp.float32), kc.astype(jnp.float32)
+            ) * scale
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = jnp.broadcast_to((k_pos < skv)[None, :], (qc, chunk))
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            pexp = jnp.exp(s - m_new)
+            pexp = jnp.where(mask[None, None, None], pexp, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(pexp, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", pexp, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new, ci + 1), None
+
+        m0 = jnp.full((b, hk, grp, qc, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, grp, qc, 1), jnp.float32)
+        a0 = jnp.zeros((b, hk, grp, qc, hd), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (kp, vp))
+        return acc / jnp.maximum(l, 1e-30)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(nq), qs))  # (nq,b,hk,grp,qc,hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qc, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Quadratic attention with an explicit (B?, Sq, Skv) bool mask (decode).
+
+    Operands stay in their storage dtype with fp32 *accumulation*
+    (``preferred_element_type``) — materializing ``cache.astype(f32)`` would
+    let XLA hoist a full-cache f32 copy out of the decode layer scan (+100%
+    cache HBM; see EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, hd = q.shape
+    hk = k.shape[2]
+    grp = h // hk
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, hk, grp, hd)
+    s = jnp.einsum(
+        "bqkgd,bckd->bkgqc", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask is not None:
+        while mask.ndim < s.ndim:
+            mask = mask[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgqc,bckd->bqkgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_train(
+    p: Dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+    window: Optional[int] = None, causal: bool = True,
+    attn_impl: str = "chunked",
+) -> jnp.ndarray:
+    """Self-attention over a full sequence (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = qkv(p, x, cfg, positions)
+    if attn_impl == "pallas":
+        o = kernel_ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=causal, window=window,
+        ).transpose(0, 2, 1, 3)
+    elif attn_impl == "chunked" and s > cfg.attn_chunk:
+        # remat: the online-softmax scan would otherwise save (m, l, acc)
+        # carries per KV block for backward — O(seq * hd) per block stack.
+        # Recomputing the chunk scan in bwd costs one extra attention fwd
+        # and drops those stacks (flash-backward behaviour).
+        attn_fn = jax.checkpoint(
+            lambda q_, k_, v_: chunked_attention(
+                q_, k_, v_, causal=causal, window=window, chunk=cfg.attn_chunk
+            )
+        )
+        o = attn_fn(q, k, v)
+    else:
+        q_pos = jnp.arange(s)
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= q_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= q_pos[None, :] > q_pos[:, None] - window
+        o = full_attention(q, k, v, mask[None])
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_prefill(
+    p: Dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward that also materializes the KV cache.
+
+    Returns (out (B,S,D), cache). For windowed layers the cache is the ring
+    buffer holding the trailing ``window`` positions (slot = pos % window),
+    consistent with :func:`attention_decode`.
+    """
+    b, s, _ = x.shape
+    causal = cfg.decoder  # encoder-only archs attend bidirectionally
+    q, k, v = qkv(p, x, cfg, positions)
+    if s > cfg.attn_chunk:
+        o = chunked_attention(q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk)
+    else:
+        q_pos = jnp.arange(s)
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= q_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= q_pos[None, :] > q_pos[:, None] - window
+        o = full_attention(q, k, v, mask[None])
+    if window:
+        slots = min(window, s)
+        # ring layout: position p -> slot p % slots; take trailing `slots`.
+        tail_k = k[:, -slots:]
+        tail_v = v[:, -slots:]
+        pos0 = s - slots
+        roll = pos0 % slots
+        k_cache = jnp.roll(tail_k, shift=roll, axis=1)
+        v_cache = jnp.roll(tail_v, shift=roll, axis=1)
+    else:
+        k_cache, v_cache = k, v
+    return o.reshape(b, s, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------- #
+# Cached decode
+# ---------------------------------------------------------------------- #
+def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None) -> Dict:
+    dt = _dt(cfg)
+    slots = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def attention_decode(
+    p: Dict, x: jnp.ndarray, cache: Dict, cache_pos: jnp.ndarray, cfg,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. x: (B, 1, D); cache_pos: scalar int32 = tokens so far.
+
+    Ring-buffer semantics when ``window`` is set (slot = pos % window; RoPE is
+    applied at write time with absolute positions, so relative geometry
+    survives the ring).
+    """
+    b = x.shape[0]
+    slots = cache["k"].shape[1]
+    q, k, v = qkv(p, x, cfg, positions=jnp.full((1,), cache_pos, jnp.int32)[None, :])
+    slot = cache_pos % slots if window else cache_pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    idx = jnp.arange(slots)
+    if window:
+        # Slot i last written at p_i = cache_pos - ((cache_pos - i) mod slots).
+        p_i = cache_pos - jnp.mod(cache_pos - idx, slots)
+        valid = p_i >= 0
+    else:
+        valid = idx <= cache_pos
+    o = full_attention(q, k_cache, v_cache, valid[None, None, :])
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,120 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, initializers.
+
+Pure-function style: ``init_*`` builds a param dict; the matching ``apply``
+is a plain function. Params live in ``cfg.param_dtype`` (bf16 by default);
+norms and softmax statistics compute in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Norms
+# ---------------------------------------------------------------------- #
+def init_norm(d: int, kind: str, dtype) -> Dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Rotary position embedding
+# ---------------------------------------------------------------------- #
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# MLPs
+# ---------------------------------------------------------------------- #
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def init_mlp(key, d: int, f: int, act: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if act in GATED_ACTS:
+        return {
+            "w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f, dtype),
+        "w_down": dense_init(ks[1], f, d, dtype),
+    }
+
+
+def apply_mlp(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act in GATED_ACTS:
+        gate_fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        g = gate_fn(x @ p["w_gate"])
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]
+
+
+def causal_depthwise_conv(
+    x: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal 1D conv. x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state is the trailing (K-1) inputs for
+    streaming decode. When ``state`` is given it is prepended (decode path);
+    otherwise zero history (training path).
+    """
+    b, s, c = x.shape
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, k - 1, c), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    windows = [xx[:, i: i + s, :] for i in range(k)]
+    y = sum(wi * w[i][None, None, :] for i, wi in enumerate(windows))
+    new_state = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros((b, 0, c), x.dtype)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,138 @@
+"""build_model(cfg) -> ModelBundle: init / loss / prefill / decode.
+
+Batch schemas (what ``input_specs`` produces per shape cell):
+
+  LM families (dense/moe/ssm/hybrid):
+      train:   {"tokens": (B, S) int32}
+  audio encoder (hubert — stubbed frontend):
+      train:   {"frames": (B, S, F) f32, "labels": (B, S) int32}
+      "prefill" = one encoder forward (no decode).
+  vlm (internvl2 — stubbed ViT):
+      train:   {"patches": (B, P, F) f32, "tokens": (B, S-P) int32}
+      loss on text targets only; serving prefixes the patch embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of, init_norm, apply_norm
+from .losses import chunked_cross_entropy, lm_loss
+from .transformer import (
+    init_cache,
+    init_stack,
+    stack_decode,
+    stack_prefill,
+    stack_train,
+)
+
+
+@dataclass
+class ModelBundle:
+    cfg: Any
+    init: Callable
+    loss_fn: Callable     # (params, batch) -> (nll_sum, metrics dict)
+    prefill: Callable     # (params, batch) -> (cache, last_logits)
+    decode_step: Callable  # (params, cache, token, cache_pos) -> (cache, logits)
+
+
+def build_model(cfg) -> ModelBundle:
+    dt = dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------------ #
+    def init(rng) -> Dict:
+        ks = jax.random.split(rng, 5)
+        p: Dict[str, Any] = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                      * 0.02).astype(dt),
+            "stack": init_stack(ks[1], cfg),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dt),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt, scale=0.02)
+        if cfg.frontend:
+            p["frontend_proj"] = dense_init(ks[3], cfg.frontend_dim, cfg.d_model, dt)
+        return p
+
+    def unembed_of(params):
+        if cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    # ------------------------------------------------------------------ #
+    def embed_batch(params, batch) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """-> (x (B, S, D), loss_mask or None)."""
+        if cfg.frontend == "audio_frames":
+            x = batch["frames"].astype(dt) @ params["frontend_proj"]
+            return x, None
+        if cfg.frontend == "vision_patches":
+            xt = jnp.take(params["embed"], batch["tokens"], axis=0)
+            xv = batch["patches"].astype(dt) @ params["frontend_proj"]
+            x = jnp.concatenate([xv, xt], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros(xv.shape[:2], jnp.float32), jnp.ones(xt.shape[:2], jnp.float32)],
+                axis=1,
+            )
+            return x, mask
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return x, None
+
+    # ------------------------------------------------------------------ #
+    def loss_fn(params, batch):
+        x, loss_mask = embed_batch(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        h, aux = stack_train(params["stack"], x, cfg, positions)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        if cfg.decoder:
+            if cfg.frontend == "vision_patches":
+                tokens = jnp.concatenate(
+                    [jnp.zeros(batch["patches"].shape[:2], jnp.int32), batch["tokens"]],
+                    axis=1,
+                )
+            else:
+                tokens = batch["tokens"]
+            nll, m = lm_loss(h, unembed_of(params), tokens,
+                             chunk=cfg.loss_chunk, loss_mask=loss_mask)
+        else:
+            labels = batch["labels"]
+            mask = jnp.ones(labels.shape, jnp.float32)
+            nll, ntok = chunked_cross_entropy(h, unembed_of(params), labels, mask,
+                                              chunk=cfg.loss_chunk)
+            m = {"n_tokens": ntok}
+        m = dict(m)
+        m["aux_loss"] = aux
+        total = nll + 0.01 * aux * m["n_tokens"] / jnp.maximum(m["n_tokens"], 1.0)
+        return total, m
+
+    # ------------------------------------------------------------------ #
+    def prefill(params, batch):
+        x, _ = embed_batch(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        h, cache = stack_prefill(params["stack"], x, cfg, positions)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        last = h[:, -1]
+        logits = (last @ unembed_of(params)).astype(jnp.float32)
+        return cache, logits
+
+    def decode_step(params, cache, token, cache_pos):
+        x = jnp.take(params["embed"], token, axis=0)  # (B, 1, D)
+        h, new_cache = stack_decode(params["stack"], x, cache, cache_pos, cfg)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = (h[:, 0] @ unembed_of(params)).astype(jnp.float32)
+        return new_cache, logits
+
+    return ModelBundle(cfg, init, loss_fn, prefill, decode_step)
+
+
+def make_cache(cfg, batch: int, max_len: int):
+    return init_cache(cfg, batch, max_len)
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))

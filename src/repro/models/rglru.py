@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)  with
+  r_t = sigmoid(W_a x_t + b_a)        (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)        (input gate)
+  a_t = exp(-c · softplus(Λ) · r_t)   (per-channel decay, c = 8)
+
+is linear in h, so training uses ``jax.lax.associative_scan`` over the
+(a, b) pairs — O(log S) depth — and decode carries a single (B, D_rnn) state.
+The full residual block is Griffin's: linear-in → causal depthwise conv →
+RG-LRU, gated by a parallel GeLU branch, then linear-out.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_depthwise_conv, dense_init, dtype_of
+
+_C = 8.0
+
+
+def init_rglru(key, cfg) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    dr = cfg.rglru_expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, dr, dt),       # recurrent branch in
+        "w_gate": dense_init(ks[1], d, dr, dt),    # GeLU gate branch
+        "conv_w": (jax.random.normal(ks[2], (4, dr), jnp.float32) * 0.1).astype(dt),
+        "w_a": dense_init(ks[3], dr, dr, dt),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": dense_init(ks[4], dr, dr, dt),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": jnp.full((dr,), 0.55, jnp.float32),  # softplus(Λ)-param
+        "w_out": dense_init(ks[5], dr, d, dt),
+    }
+
+
+def _gates(p, x):
+    """x: (B, S, Dr) -> log_a (f32), gated input b (f32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r              # (B,S,Dr), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * xf)
+    return log_a, b
+
+
+def _assoc(left, right):
+    (a1, b1), (a2, b2) = left, right
+    return a1 * a2, a2 * b1 + b2
+
+
+def apply_rglru_train(p: Dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """u: (B, S, D) -> (B, S, D)."""
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu((u @ p["w_gate"]).astype(jnp.float32))
+    x, _ = causal_depthwise_conv(x, p["conv_w"])
+    log_a, b = _gates(p, x)
+    a = jnp.exp(log_a)
+    h_a, h_b = jax.lax.associative_scan(_assoc, (a, b), axis=1)
+    h = h_b  # initial state is zero -> h_t = (scan b)
+    y = (h * gate).astype(u.dtype)
+    return y @ p["w_out"]
+
+
+def init_rglru_cache(cfg, batch: int) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    dr = cfg.rglru_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, dr), dt),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def apply_rglru_decode(p: Dict, u: jnp.ndarray, cache: Dict, cfg):
+    """u: (B, 1, D) -> (y, new_cache)."""
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu((u @ p["w_gate"]).astype(jnp.float32))
+    x, conv_state = causal_depthwise_conv(x, p["conv_w"], cache["conv"])
+    log_a, b = _gates(p, x)
+    a = jnp.exp(log_a)[:, 0]                                  # (B, Dr)
+    h = a * cache["h"] + b[:, 0]
+    y = (h[:, None, :] * gate).astype(u.dtype)
+    return y @ p["w_out"], {"conv": conv_state, "h": h}

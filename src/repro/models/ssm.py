@@ -1,0 +1,177 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training path: the chunked SSD algorithm — intra-chunk quadratic attention-like
+term + inter-chunk state recurrence (sequential scan over chunks; chunk length
+``cfg.ssm_chunk``). Decode path: the classic selective-SSM recurrence with a
+persistent (H, P, N) state — O(1) per token, which is what makes the
+``long_500k`` decode cell *run* for this family while full-attention archs
+skip it.
+
+Layout: d_inner = expand * d_model; H = d_inner / head_dim heads; state N per
+head; single B/C group (ngroups=1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_depthwise_conv, dense_init, dtype_of
+
+
+def init_ssm(key, cfg) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    return {
+        "w_in": dense_init(ks[0], d, d_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_in + 2 * n), jnp.float32)
+                   * 0.1).astype(dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[2], d_in, d, dt),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_norm(x, z, scale, eps=1e-6):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a):
+    """segsum(a)[..., i, j] = sum_{j < k <= i} a[..., k] (NEG_INF for j > i)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk):
+    """SSD scan. x: (B,S,H,P); a: (B,S,H) (= dt*A, negative); b/c: (B,S,N).
+
+    Returns y: (B,S,H,P). Sequential scan over S/chunk chunks; O(S·chunk)
+    intra-chunk work + O(S·N·P) states.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    s_orig = s
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    xs = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    as_ = a.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bs = b.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cs = c.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def step(state, inp):
+        xc, ac, bc, cc = inp  # (B,l,H,P), (B,l,H), (B,l,N), (B,l,N)
+        ac_f = ac.astype(jnp.float32)
+        a_cum = jnp.cumsum(ac_f, axis=1)                       # (B,l,H)
+        # Intra-chunk (the "attention-like" quadratic term).
+        ls = jnp.exp(_segsum(ac_f.transpose(0, 2, 1)))          # (B,H,l,l)
+        scores = jnp.einsum("bln,bmn->blm", cc.astype(jnp.float32),
+                            bc.astype(jnp.float32))             # (B,l,m)
+        y_diag = jnp.einsum("bhlm,blm,bmhp->blhp", ls, scores, xc.astype(jnp.float32))
+        # Contribution of the carried state.
+        state_decay_in = jnp.exp(a_cum)                         # (B,l,H)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", cc.astype(jnp.float32),
+                           state, state_decay_in)
+        # Next chunk state.
+        decay_states = jnp.exp(a_cum[:, -1:, :] - a_cum)        # (B,l,H)
+        new_state = jnp.einsum("bln,blh,blhp->bhpn", bc.astype(jnp.float32),
+                               decay_states, xc.astype(jnp.float32))
+        chunk_decay = jnp.exp(a_cum[:, -1, :])                  # (B,H)
+        state = state * chunk_decay[:, :, None, None] + new_state
+        return state, (y_diag + y_off)
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, (xs, as_, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y[:, :s_orig].astype(x.dtype)
+
+
+def apply_ssm_train(params: Dict, u: jnp.ndarray, cfg) -> jnp.ndarray:
+    """u: (B, S, D) -> (B, S, D). S must be a multiple of cfg.ssm_chunk."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    proj = u @ params["w_in"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, _ = causal_depthwise_conv(xbc, params["conv_w"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in: d_in + n]
+    c = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                          # (H,)
+    bsz, s, _ = x.shape
+    xh = x.reshape(bsz, s, h, cfg.ssm_head_dim)
+    y = ssd_chunked(xh * dt[..., None].astype(xh.dtype), dt * a, b, c, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in)
+    y = _gated_norm(y, z, params["norm_scale"])
+    return y @ params["w_out"]
+
+
+# ---------------------------------------------------------------------- #
+# Decode
+# ---------------------------------------------------------------------- #
+def init_ssm_cache(cfg, batch: int) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n), dt),
+        "state": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def apply_ssm_decode(params: Dict, u: jnp.ndarray, cache: Dict, cfg):
+    """u: (B, 1, D). Returns (y, new_cache). O(1) per token."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    proj = u @ params["w_in"]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, conv_state = causal_depthwise_conv(xbc, params["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xbc.dtype)
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in: d_in + n]
+    c = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                                   # (B,H)
+    xh = x[:, 0].reshape(-1, h, cfg.ssm_head_dim).astype(jnp.float32)      # (B,H,P)
+    bx = jnp.einsum("bn,bhp->bhpn", b[:, 0].astype(jnp.float32), xh * dt[..., None])
+    state = cache["state"] * da[..., None, None] + bx
+    y = jnp.einsum("bhpn,bn->bhp", state, c[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_in)
+    y = _gated_norm(y, z, params["norm_scale"])
+    return y @ params["w_out"], {"conv": conv_state, "state": state}

@@ -1,0 +1,382 @@
+"""The layer stack: pattern blocks, scan-over-layers, train/prefill/decode.
+
+Every assigned architecture is an instance of one stack schema:
+
+  embed (tokens and/or stubbed modality frontend)
+  -> [pattern block] * n_repeats  (+ unrolled remainder layers)
+  -> final norm -> unembed
+
+A *pattern block* is ``cfg.layer_pattern`` applied in order; entries:
+  "attn"   — global GQA attention + FFN (dense or MoE)
+  "lattn"  — sliding-window attention + FFN
+  "rglru"  — RG-LRU recurrent block + FFN        (RecurrentGemma)
+  "ssm"    — Mamba-2 SSD block, no separate FFN  (mamba2)
+
+Homogeneous-layer params are stacked on a leading ``n_repeats`` axis and the
+stack runs under ``lax.scan`` (small HLO, fast compiles at 48-80 layers) with
+optional per-block ``jax.checkpoint`` (remat). The remainder layers
+(depth % pattern) are unrolled with their own params/caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, dtype_of, dense_init, init_mlp, init_norm
+
+
+# ---------------------------------------------------------------------- #
+# Per-layer init / apply
+# ---------------------------------------------------------------------- #
+def _init_layer(key, kind: str, cfg) -> Dict:
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm, dt)}
+    if kind in ("attn", "lattn"):
+        p["temporal"] = attn_mod.init_attention(ks[0], cfg)
+    elif kind == "rglru":
+        p["temporal"] = rglru_mod.init_rglru(ks[0], cfg)
+    elif kind == "ssm":
+        p["temporal"] = ssm_mod.init_ssm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm, dt)
+        if cfg.is_moe:
+            p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def _apply_ffn(p, x, cfg):
+    if cfg.is_moe:
+        return moe_mod.apply_moe(p, x, cfg)
+    ax = getattr(cfg, "act_shard_axis", "")
+    if ax:
+        # Megatron-SP boundary: leave the seq-sharded domain for the FFN so
+        # the F dim can use the model axis (one axis cannot shard both).
+        # Without these hints GSPMD keeps seq sharded, fully gathers the
+        # weights and emits unsharded per-layer grad all-reduces (§Perf).
+        from jax.sharding import PartitionSpec as P
+        from .layers import GATED_ACTS
+
+        bax = tuple(getattr(cfg, "act_batch_axes", ()) or ()) or None
+        x = jax.lax.with_sharding_constraint(x, P(bax, None, None))
+        pin = lambda t: jax.lax.with_sharding_constraint(t, P(bax, None, ax))
+        if cfg.act in GATED_ACTS:
+            gate_fn = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+            g = pin(gate_fn(x @ p["w_gate"]))
+            h = g * pin(x @ p["w_up"])
+        else:
+            h = pin(x @ p["w_up"])
+            h = jax.nn.gelu(h) if cfg.act == "gelu" else jnp.square(jax.nn.relu(h))
+        return h @ p["w_down"], jnp.zeros((), jnp.float32)
+    return apply_mlp(p, x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _seq_shard(x, cfg):
+    """Sequence-parallel residual stream (Megatron-SP): the saved per-layer
+    activations shard their seq dim over the model axis (and keep the batch
+    dim on the dp axes in fsdp mode); GSPMD inserts the gather before
+    attention and the scatter after."""
+    ax = getattr(cfg, "act_shard_axis", "")
+    if not ax:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    bax = tuple(getattr(cfg, "act_batch_axes", ()) or ())
+    return jax.lax.with_sharding_constraint(x, P(bax if bax else None, ax, None))
+
+
+def _layer_train(kind: str, p: Dict, x: jnp.ndarray, cfg, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    from jax.ad_checkpoint import checkpoint_name
+
+    save = (lambda a, n: checkpoint_name(a, n)) if getattr(cfg, "remat_save_outs", False) \
+        else (lambda a, n: a)
+    x = _seq_shard(x, cfg)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    causal = cfg.decoder
+    if kind == "attn":
+        t = attn_mod.attention_train(p["temporal"], h, cfg, positions, window=None, causal=causal)
+    elif kind == "lattn":
+        t = attn_mod.attention_train(p["temporal"], h, cfg, positions, window=cfg.window, causal=causal)
+    elif kind == "rglru":
+        t = rglru_mod.apply_rglru_train(p["temporal"], h, cfg)
+    elif kind == "ssm":
+        t = ssm_mod.apply_ssm_train(p["temporal"], h, cfg)
+    x = x + save(t, "temporal_out").astype(x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    if kind != "ssm":
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        f, aux = _apply_ffn(p["ffn"], h2, cfg)
+        x = x + save(f, "ffn_out").astype(x.dtype)
+    return x, aux
+
+
+def _layer_prefill(kind: str, p: Dict, x, cfg, positions):
+    """Like _layer_train but also returns this layer's decode cache."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "lattn"):
+        window = cfg.window if kind == "lattn" else None
+        t, cache = attn_mod.attention_prefill(p["temporal"], h, cfg, positions, window=window)
+    elif kind == "rglru":
+        t = rglru_mod.apply_rglru_train(p["temporal"], h, cfg)
+        cache = _rglru_state_from_prefill(p["temporal"], h, cfg)
+    elif kind == "ssm":
+        t, cache = _ssm_prefill(p["temporal"], h, cfg)
+    x = x + t.astype(x.dtype)
+    if kind != "ssm":
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        f, _ = _apply_ffn(p["ffn"], h2, cfg)
+        x = x + f.astype(x.dtype)
+    return x, cache
+
+
+def _layer_decode(kind: str, p: Dict, x, cache, cache_pos, cfg):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "lattn"):
+        window = cfg.window if kind == "lattn" else None
+        t, new_cache = attn_mod.attention_decode(p["temporal"], h, cache, cache_pos, cfg, window=window)
+    elif kind == "rglru":
+        t, new_cache = rglru_mod.apply_rglru_decode(p["temporal"], h, cache, cfg)
+    elif kind == "ssm":
+        t, new_cache = ssm_mod.apply_ssm_decode(p["temporal"], h, cache, cfg)
+    x = x + t.astype(x.dtype)
+    if kind != "ssm":
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        f, _ = _apply_ffn(p["ffn"], h2, cfg)
+        x = x + f.astype(x.dtype)
+    return x, new_cache
+
+
+def _rglru_state_from_prefill(p, h, cfg):
+    """Recompute the final RG-LRU state after a prefill pass (cheap: reuses
+    the linear-recurrence scan once more on the gate path only)."""
+    x = h @ p["w_x"]
+    x, conv_state = _conv_tail(x, p["conv_w"])
+    log_a, b = rglru_mod._gates(p, x)
+    a = jnp.exp(log_a)
+    _, hb = jax.lax.associative_scan(rglru_mod._assoc, (a, b), axis=1)
+    return {"conv": conv_state, "h": hb[:, -1]}
+
+
+def _conv_tail(x, w):
+    from .layers import causal_depthwise_conv
+
+    k = w.shape[0]
+    y, _ = causal_depthwise_conv(x, w)
+    tail = x[:, -(k - 1):, :] if k > 1 else x[:, :0, :]
+    return y, tail
+
+
+def _ssm_prefill(p, h, cfg):
+    """SSD forward + final (conv, state) caches for streaming decode."""
+    y = ssm_mod.apply_ssm_train(p, h, cfg)
+    # Recover final conv state and SSM state by replaying the tail cheaply:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    hheads = d_in // cfg.ssm_head_dim
+    proj = h @ p["w_in"]
+    _, xbc, dt_raw = ssm_mod._split_proj(proj, cfg)
+    conv_state = xbc[:, -(cfg.ssm_conv - 1):, :]
+    xbc_c, _ = ssm_mod.causal_depthwise_conv(xbc, p["conv_w"])
+    xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(xbc_c.dtype)
+    x = xbc_c[..., :d_in]
+    b = xbc_c[..., d_in: d_in + n]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    bsz, s, _ = x.shape
+    xh = x.reshape(bsz, s, hheads, cfg.ssm_head_dim).astype(jnp.float32)
+    # state = sum_t exp(sum_{u>t} a du) * dt_t B_t x_t^T   via a scan in chunks
+    da = dt * a  # (B,S,H)
+    rev_cum = jnp.cumsum(da[:, ::-1, :], axis=1)[:, ::-1, :] - da  # sum_{u>t}
+    w_t = jnp.exp(rev_cum)  # (B,S,H)
+    state = jnp.einsum("bsn,bsh,bshp->bhpn", b.astype(jnp.float32),
+                       w_t * dt, xh)
+    return y, {"conv": conv_state, "state": state}
+
+
+# ---------------------------------------------------------------------- #
+# Stack init
+# ---------------------------------------------------------------------- #
+def init_stack(key, cfg) -> Dict:
+    pattern = cfg.layer_pattern
+    plen = len(pattern)
+    n_rep = cfg.n_layers // plen
+    n_extra = cfg.n_layers - n_rep * plen
+    keys = jax.random.split(key, plen + max(n_extra, 1))
+    blocks = []
+    for pos, kind in enumerate(pattern):
+        if n_rep > 0:
+            sub = jax.random.split(keys[pos], n_rep)
+            blocks.append(jax.vmap(lambda kk: _init_layer(kk, kind, cfg))(sub))
+        else:
+            blocks.append(None)
+    extras = []
+    for i in range(n_extra):
+        kind = pattern[i % plen]
+        extras.append(_init_layer(keys[plen + i], kind, cfg))
+    return {"blocks": blocks, "extras": extras}
+
+
+def stack_layout(cfg) -> Tuple[int, List[str]]:
+    """(n_repeats, extra_kinds)."""
+    plen = len(cfg.layer_pattern)
+    n_rep = cfg.n_layers // plen
+    n_extra = cfg.n_layers - n_rep * plen
+    return n_rep, [cfg.layer_pattern[i % plen] for i in range(n_extra)]
+
+
+# ---------------------------------------------------------------------- #
+# Stack apply
+# ---------------------------------------------------------------------- #
+def _inner_factor(n: int) -> int:
+    """Largest divisor of n not exceeding sqrt(n) (sqrt-remat grouping)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def stack_train(params: Dict, x: jnp.ndarray, cfg, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pattern = cfg.layer_pattern
+    n_rep, extra_kinds = stack_layout(cfg)
+
+    def block_body(carry, blk_params):
+        h, aux = carry
+        for pos, kind in enumerate(pattern):
+            h, a = _layer_train(kind, blk_params[pos], h, cfg, positions)
+            aux = aux + a
+        return (h, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_rep > 0:
+        # sqrt-remat measured WORSE on this stack (XLA hoists the gathered
+        # inner param groups; see EXPERIMENTS.md §Perf) — off by default.
+        n_inner = _inner_factor(n_rep) if (cfg.remat and getattr(cfg, "remat_sqrt", False)) else 1
+        if cfg.remat and n_inner > 1:
+            # Two-level (sqrt) remat: the outer scan checkpoints only
+            # n_outer carries; each outer step re-runs an inner scan of
+            # n_inner blocks during backward. Activation residency drops
+            # from O(L) to O(n_outer + n_inner) block carries.
+            n_outer = n_rep // n_inner
+            grouped = jax.tree.map(
+                lambda t: t.reshape((n_outer, n_inner) + t.shape[1:]),
+                tuple(params["blocks"]),
+            )
+
+            @jax.checkpoint
+            def outer_body(carry, group_params):
+                (h, aux), _ = jax.lax.scan(block_body, carry, group_params)
+                return (h, aux), None
+
+            (x, aux), _ = jax.lax.scan(outer_body, (x, aux0), grouped)
+        else:
+            if cfg.remat and getattr(cfg, "remat_save_outs", False):
+                # Selective activation recomputation (Megatron-style): keep
+                # the post-TP-collective sublayer outputs; the remat replay
+                # then never re-issues their all-reduces.
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "temporal_out", "ffn_out"
+                )
+                body = jax.checkpoint(block_body, policy=policy)
+            elif cfg.remat:
+                body = jax.checkpoint(block_body)
+            else:
+                body = block_body
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), tuple(params["blocks"]))
+    else:
+        aux = aux0
+    for p_extra, kind in zip(params["extras"], extra_kinds):
+        x, a = _layer_train(kind, p_extra, x, cfg, positions)
+        aux = aux + a
+    return x, aux
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict:
+    """Stacked decode caches matching the scan layout."""
+    pattern = cfg.layer_pattern
+    n_rep, extra_kinds = stack_layout(cfg)
+
+    def one(kind):
+        if kind == "attn":
+            return attn_mod.init_kv_cache(cfg, batch, max_len, window=None)
+        if kind == "lattn":
+            return attn_mod.init_kv_cache(cfg, batch, max_len, window=cfg.window)
+        if kind == "rglru":
+            return rglru_mod.init_rglru_cache(cfg, batch)
+        if kind == "ssm":
+            return ssm_mod.init_ssm_cache(cfg, batch)
+        raise ValueError(kind)
+
+    blocks = []
+    for kind in pattern:
+        if n_rep > 0:
+            c = one(kind)
+            blocks.append(jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n_rep,) + t.shape).copy(), c))
+        else:
+            blocks.append(None)
+    extras = [one(kind) for kind in extra_kinds]
+    return {"blocks": blocks, "extras": extras}
+
+
+def stack_prefill(params: Dict, x: jnp.ndarray, cfg, positions) -> Tuple[jnp.ndarray, Dict]:
+    pattern = cfg.layer_pattern
+    n_rep, extra_kinds = stack_layout(cfg)
+
+    def block_body(h, blk_params):
+        caches = []
+        for pos, kind in enumerate(pattern):
+            h, c = _layer_prefill(kind, blk_params[pos], h, cfg, positions)
+            caches.append(c)
+        return h, tuple(caches)
+
+    body = jax.checkpoint(block_body) if cfg.remat else block_body
+    if n_rep > 0:
+        x, caches = jax.lax.scan(body, x, tuple(params["blocks"]))
+        caches = list(caches)
+    else:
+        caches = [None for _ in pattern]
+    extra_caches = []
+    for p_extra, kind in zip(params["extras"], extra_kinds):
+        x, c = _layer_prefill(kind, p_extra, x, cfg, positions)
+        extra_caches.append(c)
+    return x, {"blocks": caches, "extras": extra_caches}
+
+
+def stack_decode(params: Dict, x: jnp.ndarray, cache: Dict, cache_pos, cfg) -> Tuple[jnp.ndarray, Dict]:
+    pattern = cfg.layer_pattern
+    n_rep, extra_kinds = stack_layout(cfg)
+
+    def block_body(h, xs):
+        blk_params, blk_cache = xs
+        new_caches = []
+        for pos, kind in enumerate(pattern):
+            h, nc = _layer_decode(kind, blk_params[pos], h, blk_cache[pos], cache_pos, cfg)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    if n_rep > 0:
+        x, new_block_caches = jax.lax.scan(
+            block_body, x, (tuple(params["blocks"]), tuple(cache["blocks"]))
+        )
+        new_block_caches = list(new_block_caches)
+    else:
+        new_block_caches = [None for _ in pattern]
+    new_extras = []
+    for p_extra, c_extra, kind in zip(params["extras"], cache["extras"], extra_kinds):
+        x, nc = _layer_decode(kind, p_extra, x, c_extra, cache_pos, cfg)
+        new_extras.append(nc)
+    return x, {"blocks": new_block_caches, "extras": new_extras}

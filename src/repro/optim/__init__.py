@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW + schedules."""
+
+from . import adamw
+from .schedule import constant, warmup_cosine
+
+__all__ = ["adamw", "constant", "warmup_cosine"]

@@ -1,0 +1,78 @@
+"""AdamW on pytrees: bf16 params, fp32 moments, global-norm clipping.
+
+Plain functions (no optax dependency): ``init`` builds the state,
+``update`` applies one step. Moments are fp32 regardless of param dtype;
+the weight update is computed in fp32 and cast back (stochastic-rounding-free
+bf16 training is fine at these scales with fp32 moments).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(
+    grads: Any,
+    state: Dict[str, Any],
+    params: Any,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def one(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        pf = p.astype(jnp.float32)
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p_new = pf - lr * (upd + wd * pf)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    ps, ms, vs = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        pn, mn, vn = one(g, m, v, p)
+        ps.append(pn)
+        ms.append(mn)
+        vs.append(vn)
+    new_params = jax.tree_util.tree_unflatten(treedef, ps)
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(treedef, ms),
+        "v": jax.tree_util.tree_unflatten(treedef, vs),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,30 @@
+"""Distributed execution substrate: USEC executors, wall-clock simulation,
+checkpointing, gradient compression."""
+
+from .checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from .executor import BlockPlan, StagedMatrix, block_plan, make_matvec_executor, stage_matrix
+from .simulate import (
+    SpeedProcess,
+    StepTiming,
+    StragglerProcess,
+    exponential_speeds,
+    simulate_step,
+    worker_times,
+)
+
+__all__ = [
+    "BlockPlan",
+    "SpeedProcess",
+    "StagedMatrix",
+    "StepTiming",
+    "StragglerProcess",
+    "block_plan",
+    "exponential_speeds",
+    "latest_checkpoint",
+    "make_matvec_executor",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "simulate_step",
+    "stage_matrix",
+    "worker_times",
+]

@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Halves the bytes of the data-axis gradient reduction: gradients are quantized
+to int8 against a per-leaf scale, summed on the wire as int16 (int8 values
+summed over up to 256 workers fit int16 exactly: 127*256 = 32512 < 2^15), and
+dequantized after the reduce. The quantization error is fed back into the
+next step's gradient (error-feedback / EF-SGD), which keeps SGD/Adam
+convergence intact (Karimireddy et al., 2019).
+
+The scale must be identical on all workers *before* the reduce, so it is
+carried in the compression state from the previous step (scale-from-last-step
+scheme) rather than computed from the local gradient.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params: Any) -> Any:
+    """(error_feedback, scale) per leaf."""
+    ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    scale = jax.tree.map(lambda p: jnp.asarray(1e-2, jnp.float32), params)
+    return {"ef": ef, "scale": scale}
+
+
+def compress_decompress(grads: Any, state: Any, axis_name: str) -> Tuple[Any, Any]:
+    """Quantize+psum+dequantize gradients over ``axis_name`` with error
+    feedback. Returns (reduced_grads, new_state).
+
+    Call *inside* a shard_map/named scope where ``axis_name`` is manual.
+    """
+
+    def one(g, ef, scale):
+        g = g.astype(jnp.float32) + ef
+        q = jnp.clip(jnp.round(g / scale), -127, 127)
+        deq_local = q * scale
+        new_ef = g - deq_local
+        summed = jax.lax.psum(q.astype(jnp.int16), axis_name)
+        reduced = summed.astype(jnp.float32) * scale
+        # Next step's scale covers the worst LOCAL magnitude (pmax keeps it
+        # identical on every worker); a reduced-based estimate under-scales
+        # by the worker count and lets clipping error feed back unboundedly.
+        local_max = jnp.max(jnp.abs(g))
+        new_scale = jnp.maximum(
+            jax.lax.pmax(local_max, axis_name) / 127.0, 1e-8
+        )
+        return reduced, new_ef, new_scale
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_ef = treedef.flatten_up_to(state["ef"])
+    flat_sc = treedef.flatten_up_to(state["scale"])
+    red, efs, scs = [], [], []
+    for g, ef, sc in zip(flat_g, flat_ef, flat_sc):
+        r, e, s = one(g, ef, sc)
+        red.append(r)
+        efs.append(e)
+        scs.append(s)
+    return (
+        jax.tree_util.tree_unflatten(treedef, red),
+        {
+            "ef": jax.tree_util.tree_unflatten(treedef, efs),
+            "scale": jax.tree_util.tree_unflatten(treedef, scs),
+        },
+    )

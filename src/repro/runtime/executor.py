@@ -1,0 +1,224 @@
+"""Distributed USEC executors (shard_map over the worker axis).
+
+The executor realizes the paper's computation assignment on an SPMD mesh:
+
+- every worker stages verbatim copies of the tiles its placement Z_n assigns
+  (uncoded storage),
+- the compiled plan gives each worker a *block list* (fixed-size row blocks of
+  its stored tiles) plus an inclusion weight per block,
+- workers run a ``fori_loop`` with their **own trip count** — uneven loads
+  execute as different iteration counts of the same compiled program — then
+  meet at a single ``psum`` (the "master combine").
+
+Redundant (1+S) blocks are computed by all their holders; the inclusion mask
+(0/1) selects exactly one surviving copy per block, so the psum reconstructs
+``y = X w`` exactly even when straggler contributions are dropped.
+
+The worker axis is *manual* (shard_map) while any other mesh axes stay under
+GSPMD — so the same executor works on (data,) meshes and (data, model) meshes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.plan import CompiledPlan
+
+
+# ---------------------------------------------------------------------- #
+# Staging (host-side): uncoded copies per placement
+# ---------------------------------------------------------------------- #
+@dataclass
+class StagedMatrix:
+    """Per-worker staged tile copies of the data matrix X.
+
+    staged:    (N, T_stage, rows_per_tile, r) — worker n's local tile copies
+               (zeros in unused slots). This J-fold duplication *is* the
+               paper's uncoded storage cost.
+    slot_of:   (N, G) int32 — staged slot of tile g on worker n (-1 if absent).
+    """
+
+    staged: np.ndarray
+    slot_of: np.ndarray
+
+    @property
+    def t_stage(self) -> int:
+        return self.staged.shape[1]
+
+
+def stage_matrix(x: np.ndarray, placement, rows_per_tile: int) -> StagedMatrix:
+    """Copy each tile of X onto its placement holders (host memory)."""
+    n = placement.n_machines
+    g_total = placement.n_tiles
+    q, r = x.shape
+    if q != g_total * rows_per_tile:
+        raise ValueError(f"X has {q} rows != G*rows_per_tile = {g_total * rows_per_tile}")
+    z = placement.storage_sets()
+    t_stage = max(len(s) for s in z)
+    staged = np.zeros((n, t_stage, rows_per_tile, r), dtype=x.dtype)
+    slot_of = np.full((n, g_total), -1, dtype=np.int32)
+    for worker in range(n):
+        for slot, g in enumerate(sorted(z[worker])):
+            staged[worker, slot] = x[g * rows_per_tile: (g + 1) * rows_per_tile]
+            slot_of[worker, g] = slot
+    return StagedMatrix(staged, slot_of)
+
+
+# ---------------------------------------------------------------------- #
+# Block plans: segments -> fixed-size work units
+# ---------------------------------------------------------------------- #
+@dataclass
+class BlockPlan:
+    """Per-worker fixed-size block lists (padded).
+
+    blk_slot:    (N, B) int32  — staged slot holding the block's tile
+    blk_off:     (N, B) int32  — row offset within the tile
+    blk_goff:    (N, B) int32  — global output row offset
+    blk_include: (N, B) float32 — combine weight (1 = this copy is used)
+    n_blocks:    (N,)  int32  — per-worker trip count
+    block_rows:  rows per block (static)
+    """
+
+    blk_slot: np.ndarray
+    blk_off: np.ndarray
+    blk_goff: np.ndarray
+    blk_include: np.ndarray
+    n_blocks: np.ndarray
+    block_rows: int
+
+    @property
+    def b_max(self) -> int:
+        return self.blk_slot.shape[1]
+
+
+def block_plan(
+    plan: CompiledPlan,
+    slot_of: np.ndarray,
+    block_rows: int,
+    stragglers: Sequence[int] = (),
+    b_max: Optional[int] = None,
+) -> BlockPlan:
+    """Expand a CompiledPlan's segments into per-worker block lists.
+
+    Requires the plan to have been compiled with ``row_align == block_rows``
+    (and ``block_rows | rows_per_tile``) so every segment is block-aligned.
+    """
+    if plan.rows_per_tile % block_rows:
+        raise ValueError(
+            f"block_rows={block_rows} must divide rows_per_tile={plan.rows_per_tile}"
+        )
+    inc = plan.include_mask(stragglers)
+    n = plan.n_machines
+    lists = [[] for _ in range(n)]
+    for w in range(n):
+        for t in range(plan.t_max):
+            ln = int(plan.seg_len[w, t])
+            if ln == 0:
+                continue
+            if ln % block_rows:
+                raise ValueError(
+                    "segment not block-aligned; compile the plan with "
+                    f"row_align={block_rows}"
+                )
+            g = int(plan.seg_tile[w, t])
+            st = int(plan.seg_start[w, t])
+            slot = int(slot_of[w, g])
+            if slot < 0:
+                raise RuntimeError(f"worker {w} assigned tile {g} it does not store")
+            use = float(inc[w, t])
+            for b in range(ln // block_rows):
+                off = st + b * block_rows
+                lists[w].append(
+                    (slot, off, g * plan.rows_per_tile + off, use)
+                )
+    cap = max((len(l) for l in lists), default=0)
+    if b_max is not None:
+        if b_max < cap:
+            raise ValueError(f"b_max={b_max} < needed {cap}")
+        cap = b_max
+    cap = max(cap, 1)
+    bp = BlockPlan(
+        blk_slot=np.zeros((n, cap), np.int32),
+        blk_off=np.zeros((n, cap), np.int32),
+        blk_goff=np.zeros((n, cap), np.int32),
+        blk_include=np.zeros((n, cap), np.float32),
+        n_blocks=np.zeros((n,), np.int32),
+        block_rows=block_rows,
+    )
+    for w in range(n):
+        for i, (slot, off, goff, use) in enumerate(lists[w]):
+            bp.blk_slot[w, i] = slot
+            bp.blk_off[w, i] = off
+            bp.blk_goff[w, i] = goff
+            bp.blk_include[w, i] = use
+        bp.n_blocks[w] = len(lists[w])
+    return bp
+
+
+# ---------------------------------------------------------------------- #
+# The jitted executor
+# ---------------------------------------------------------------------- #
+def make_matvec_executor(
+    mesh: jax.sharding.Mesh,
+    worker_axis: str,
+    rows_total: int,
+    block_rows: int,
+    matmul: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = None,
+) -> Callable:
+    """Build the jitted USEC matvec step ``y = X w`` for a fixed geometry.
+
+    Returns ``step(staged, blk_slot, blk_off, blk_goff, blk_include,
+    n_blocks, w) -> y`` where array shapes follow :class:`StagedMatrix` /
+    :class:`BlockPlan` and ``w`` is (r,) or (r, c). The output is (rows_total,
+    [c]) float32, fully reduced.
+
+    ``matmul`` defaults to a fp32-accumulating dot; on TPU pass
+    ``repro.kernels.ops.usec_matvec`` to run the Pallas kernel per block.
+    """
+    mm = matmul or (
+        lambda xb, wb: jnp.dot(
+            xb.astype(jnp.float32), wb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    )
+
+    def body(staged, blk_slot, blk_off, blk_goff, blk_include, n_blocks, w):
+        # Per-worker shapes: staged (1, T, rows_per_tile, r); plan rows (1, B).
+        staged = staged[0]
+        blk_slot, blk_off = blk_slot[0], blk_off[0]
+        blk_goff, blk_include = blk_goff[0], blk_include[0]
+        w2 = w if w.ndim == 2 else w[:, None]
+        cols = w2.shape[1]
+        y0 = jnp.zeros((rows_total, cols), jnp.float32)
+
+        def step(i, y):
+            xb = jax.lax.dynamic_slice(
+                staged[blk_slot[i]],
+                (blk_off[i], 0),
+                (block_rows, staged.shape[-1]),
+            )
+            yb = mm(xb, w2) * blk_include[i]
+            return jax.lax.dynamic_update_slice(y, yb, (blk_goff[i], 0))
+
+        y = jax.lax.fori_loop(0, n_blocks[0], step, y0)
+        y = jax.lax.psum(y, worker_axis)
+        return y if w.ndim == 2 else y[:, 0]
+
+    sharded = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(worker_axis), P(worker_axis), P(worker_axis), P(worker_axis),
+            P(worker_axis), P(worker_axis), P(),
+        ),
+        out_specs=P(),
+        axis_names={worker_axis},
+        check_vma=False,
+    )
+    return jax.jit(sharded)

@@ -1,0 +1,145 @@
+"""Wall-clock simulation of USEC steps on heterogeneous elastic clusters.
+
+This container has one CPU device, so the *latency* claims of the paper are
+validated analytically, exactly as the paper's model defines them:
+
+  worker n's finish time  t_n = mu[n] / s[n]        (Definition 3)
+  step completion         = earliest time by which every segment has been
+                            delivered by at least one of its 1+S holders
+                            (the master's "first N_t - S results" semantics)
+
+The simulator also generates realistic speed processes (exponential draws as
+in Fig. 2, plus drifting/noisy speeds for the adaptive EWMA study) and
+straggler processes (uniform random, targeted-slowest, persistent).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.plan import CompiledPlan
+
+
+@dataclass
+class StepTiming:
+    """Timing outcome of one simulated USEC step."""
+
+    finish_times: np.ndarray          # (N,) per-worker finish time (inf if preempted)
+    completion_time: float            # when the master could reconstruct y
+    used_workers: Tuple[int, ...]     # workers whose results the master used
+    straggled: Tuple[int, ...]        # workers slower than the completion time
+
+
+def worker_times(plan: CompiledPlan, speeds: np.ndarray) -> np.ndarray:
+    """t_n = load_n / s_n with load in tile units (paper Definition 3)."""
+    loads = plan.loads()
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = np.where(loads > 0, loads / np.maximum(speeds, 1e-300), 0.0)
+    return t
+
+
+def simulate_step(
+    plan: CompiledPlan,
+    speeds: np.ndarray,
+    dropped: Sequence[int] = (),
+) -> StepTiming:
+    """Completion = min over worker-finish-order prefixes that cover all
+    segments (workers in ``dropped`` never deliver)."""
+    t = worker_times(plan, speeds)
+    n = plan.n_machines
+    drop = set(int(d) for d in dropped)
+    order = sorted(
+        (w for w in range(n) if plan.n_valid[w] > 0 and w not in drop),
+        key=lambda w: t[w],
+    )
+    needed = {sid: set(seg.group) for sid, seg in enumerate(plan.segments)}
+    pending = set(needed)
+    arrived: List[int] = []
+    completion = float("inf")
+    for w in order:
+        arrived.append(w)
+        done = [sid for sid in pending if w in needed[sid]]
+        for sid in done:
+            pending.discard(sid)
+        if not pending:
+            completion = t[w]
+            break
+    if pending:
+        raise RuntimeError(
+            f"segments {sorted(pending)} undeliverable; dropped={sorted(drop)} "
+            f"exceeds the plan's straggler tolerance S={plan.stragglers}"
+        )
+    used = tuple(arrived)
+    straggled = tuple(
+        w for w in range(n)
+        if plan.n_valid[w] > 0 and (w in drop or t[w] > completion + 1e-15)
+    )
+    return StepTiming(t, completion, used, straggled)
+
+
+# ---------------------------------------------------------------------- #
+# Speed / straggler processes
+# ---------------------------------------------------------------------- #
+@dataclass
+class SpeedProcess:
+    """Per-step true speeds: base draw + lognormal jitter + optional drift.
+
+    Models the paper's EC2 observation: same instance type, persistently
+    different speeds, with step-to-step noise.
+    """
+
+    base: np.ndarray
+    jitter_sigma: float = 0.0
+    drift_sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._drift = np.ones_like(self.base)
+
+    def sample(self) -> np.ndarray:
+        if self.drift_sigma > 0:
+            self._drift *= np.exp(self._rng.normal(0, self.drift_sigma, self.base.shape))
+            self._drift = np.clip(self._drift, 0.25, 4.0)
+        jit = (
+            np.exp(self._rng.normal(0, self.jitter_sigma, self.base.shape))
+            if self.jitter_sigma > 0 else 1.0
+        )
+        return self.base * self._drift * jit
+
+
+def exponential_speeds(n: int, mean: float = 1.0, seed: int = 0,
+                       floor: float = 1e-3) -> np.ndarray:
+    """The paper's Fig. 2 speed model: i.i.d. exponential draws."""
+    rng = np.random.default_rng(seed)
+    return np.maximum(rng.exponential(mean, n), floor)
+
+
+@dataclass
+class StragglerProcess:
+    """Draws per-step straggler sets.
+
+    mode: "none" | "uniform" (any S of the available) | "slowest"
+    (the S slowest true speeds — the adversarial case).
+    """
+
+    count: int = 0
+    mode: str = "uniform"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, available: Sequence[int], speeds: np.ndarray) -> Tuple[int, ...]:
+        if self.count <= 0 or self.mode == "none":
+            return ()
+        avail = list(available)
+        s = min(self.count, max(len(avail) - 1, 0))
+        if self.mode == "uniform":
+            return tuple(self._rng.choice(avail, size=s, replace=False))
+        if self.mode == "slowest":
+            return tuple(sorted(avail, key=lambda w: speeds[w])[:s])
+        raise ValueError(f"unknown straggler mode {self.mode!r}")

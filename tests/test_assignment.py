@@ -1,0 +1,158 @@
+"""Exactness of the assignment LP solver (paper eqs. (6)/(8)).
+
+Includes the paper's own numbers (Fig. 1, Fig. 3, Remark 1) and an
+independent-oracle comparison against scipy.optimize.linprog on random
+instances.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cyclic_placement,
+    lower_bound,
+    man_placement,
+    repetition_placement,
+    solve_assignment,
+)
+
+PAPER_SPEEDS = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0]
+
+
+# ---------------------------------------------------------------------- #
+# Paper checkpoints
+# ---------------------------------------------------------------------- #
+def test_paper_fig1_cyclic():
+    sol = solve_assignment(cyclic_placement(6, 6, 3), PAPER_SPEEDS)
+    assert abs(sol.c_star - 1.0 / 7.0) < 1e-12
+    # bottleneck: tile 0 on the three slowest machines
+    assert sol.time_of(np.array(PAPER_SPEEDS)) <= sol.c_star + 1e-9
+
+
+def test_paper_fig1_repetition():
+    sol = solve_assignment(repetition_placement(6, 6, 3), PAPER_SPEEDS)
+    assert abs(sol.c_star - 3.0 / 7.0) < 1e-12
+
+
+def test_paper_fig3_straggler_homogeneous():
+    """S=1, N_t=5, homogeneous: mu* = [2,2,2,3,3], c* = 3 (paper §III)."""
+    sol = solve_assignment(
+        repetition_placement(6, 6, 3), np.ones(6), available=[0, 1, 2, 3, 4],
+        stragglers=1,
+    )
+    assert abs(sol.c_star - 3.0) < 1e-9
+    assert np.allclose(sorted(sol.loads), [0, 2, 2, 2, 3, 3], atol=1e-7)
+
+
+def test_remark1_tradeoff_monotone_in_s():
+    p = cyclic_placement(6, 6, 3)
+    cs = [solve_assignment(p, PAPER_SPEEDS, stragglers=s).c_star for s in (0, 1, 2)]
+    assert cs[0] < cs[1] < cs[2]
+    assert abs(cs[2] - 3.0) < 1e-9  # S=2 forces mu=1 everywhere; machine 0 does 3 units
+
+
+def test_row_structure():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, PAPER_SPEEDS, stragglers=1)
+    H = p.holder_matrix()
+    assert np.all(sol.mu[~H] == 0)
+    assert np.allclose(sol.mu.sum(axis=1), 2.0, atol=1e-7)
+    assert sol.mu.max() <= 1 + 1e-9 and sol.mu.min() >= -1e-12
+
+
+# ---------------------------------------------------------------------- #
+# Independent oracle: scipy linprog
+# ---------------------------------------------------------------------- #
+def _linprog_oracle(placement, speeds, available, S):
+    from scipy.optimize import linprog
+
+    restricted = placement.restrict(available)
+    edges = restricted.edges()
+    n_e = len(edges)
+    G = restricted.n_tiles
+    N = placement.n_machines
+    # vars: mu_e (e in edges), c
+    c_obj = np.zeros(n_e + 1)
+    c_obj[-1] = 1.0
+    # equality: per tile, sum mu = 1+S
+    A_eq = np.zeros((G, n_e + 1))
+    for i, (g, n) in enumerate(edges):
+        A_eq[g, i] = 1.0
+    b_eq = np.full(G, 1.0 + S)
+    # inequality: per machine, sum mu - c*s <= 0
+    A_ub = np.zeros((N, n_e + 1))
+    for i, (g, n) in enumerate(edges):
+        A_ub[n, i] = 1.0
+    for n in range(N):
+        A_ub[n, -1] = -speeds[n]
+    b_ub = np.zeros(N)
+    bounds = [(0, 1)] * n_e + [(0, None)]
+    res = linprog(c_obj, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
+                  bounds=bounds, method="highs")
+    assert res.success
+    return res.fun
+
+
+@given(
+    seed=st.integers(0, 10 ** 6),
+    n=st.integers(3, 8),
+    j=st.integers(2, 3),
+    s_straggler=st.integers(0, 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_against_scipy_oracle(seed, n, j, s_straggler):
+    j = min(j, n)
+    if s_straggler + 1 > j:
+        s_straggler = j - 1
+    rng = np.random.default_rng(seed)
+    speeds = rng.exponential(1.0, n) + 0.05
+    p = cyclic_placement(n, 2 * n, j)
+    sol = solve_assignment(p, speeds, stragglers=s_straggler)
+    ref = _linprog_oracle(p, speeds, tuple(range(n)), s_straggler)
+    assert sol.c_star == pytest.approx(ref, rel=1e-6, abs=1e-9)
+
+
+def test_lexicographic_does_not_change_optimum():
+    rng = np.random.default_rng(7)
+    p = man_placement(6, 3)
+    s = rng.exponential(1.0, 6) + 0.05
+    a = solve_assignment(p, s, lexicographic=True)
+    b = solve_assignment(p, s, lexicographic=False)
+    assert a.c_star == pytest.approx(b.c_star, rel=1e-9)
+    # leveled solution is pointwise <= the max level and strictly more balanced
+    ra = np.sort(a.loads / s)[::-1]
+    rb = np.sort(b.loads / s)[::-1]
+    assert ra[0] == pytest.approx(rb[0], rel=1e-9)
+    assert ra[1:].sum() <= rb[1:].sum() + 1e-6
+
+
+def test_elasticity_increases_time():
+    p = cyclic_placement(6, 6, 3)
+    full = solve_assignment(p, PAPER_SPEEDS).c_star
+    reduced = solve_assignment(p, PAPER_SPEEDS, available=[0, 1, 2, 3, 4]).c_star
+    assert reduced > full
+
+
+def test_infeasible_straggler_tolerance_raises():
+    p = cyclic_placement(6, 6, 3)
+    with pytest.raises(ValueError):
+        solve_assignment(p, PAPER_SPEEDS, stragglers=3)  # J=3 < 1+S=4
+
+
+def test_lower_bound_holds():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        n = int(rng.integers(3, 9))
+        p = cyclic_placement(n, n, min(3, n))
+        s = rng.exponential(1.0, n) + 0.05
+        sol = solve_assignment(p, s)
+        assert sol.c_star >= lower_bound(p, s) - 1e-9
+
+
+def test_speeds_validation():
+    p = cyclic_placement(4, 4, 2)
+    with pytest.raises(ValueError):
+        solve_assignment(p, [1.0, 0.0, 1.0, 1.0])
+    with pytest.raises(ValueError):
+        solve_assignment(p, [1.0, 1.0, 1.0])

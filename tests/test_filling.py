@@ -1,0 +1,88 @@
+"""Algorithm 2 (the filling algorithm) — exactness and hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cyclic_placement,
+    fill_assignment,
+    homogeneous_assignment,
+    repetition_placement,
+    solve_assignment,
+    verify_assignment,
+)
+
+
+def _random_feasible_mu(rng, n_holders, S):
+    """Random mu_g with sum = 1+S, entries in [0,1] (the LP's feasible box)."""
+    L = 1 + S
+    assert n_holders >= L
+    for _ in range(200):
+        x = rng.dirichlet(np.ones(n_holders)) * L
+        if x.max() <= 1.0:
+            return x
+    # fall back to an exactly balanced vector
+    return np.full(n_holders, L / n_holders)
+
+
+@given(
+    seed=st.integers(0, 10 ** 6),
+    n_holders=st.integers(2, 9),
+    s=st.integers(0, 2),
+)
+@settings(max_examples=80, deadline=None)
+def test_filling_realizes_mu_exactly(seed, n_holders, s):
+    s = min(s, n_holders - 1)
+    rng = np.random.default_rng(seed)
+    mu = _random_feasible_mu(rng, n_holders, s)
+    machines = list(range(10, 10 + n_holders))  # non-contiguous global ids
+    ta = fill_assignment(mu, machines, stragglers=s)
+    verify_assignment(ta, mu, machines, stragglers=s)
+    assert ta.n_sets <= n_holders  # paper: terminates within N_g iterations
+    assert np.all(ta.fractions > 0)
+
+
+def test_filling_paper_fig3_groups():
+    """Repetition placement, N_t=5, S=1 homogeneous -> loads [2,2,2,3,3]."""
+    p = repetition_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), available=[0, 1, 2, 3, 4], stragglers=1)
+    for g, holders in enumerate(p.restrict([0, 1, 2, 3, 4]).holders):
+        mu_g = sol.mu[g, list(holders)]
+        ta = fill_assignment(mu_g, holders, stragglers=1)
+        verify_assignment(ta, mu_g, holders, stragglers=1)
+        for grp in ta.groups:
+            assert len(set(grp)) == 2
+
+
+def test_homogeneous_cyclic_design():
+    ta = homogeneous_assignment([3, 1, 5, 9], stragglers=1)
+    assert np.allclose(ta.fractions, 0.25)
+    # every machine appears in exactly 1+S groups
+    for m in (1, 3, 5, 9):
+        assert sum(m in g for g in ta.groups) == 2
+    assert all(len(set(g)) == 2 for g in ta.groups)
+
+
+def test_homogeneous_insufficient_holders():
+    with pytest.raises(ValueError):
+        homogeneous_assignment([0, 1], stragglers=2)
+
+
+def test_filling_rejects_out_of_box_entries():
+    # entries must lie in [0,1]; with sum = 1+S that also guarantees the
+    # max <= sum/(1+S) filling precondition (Lemma 1 of [6]).
+    with pytest.raises(ValueError):
+        fill_assignment([1.5, 0.5], [0, 1], stragglers=1)
+
+
+def test_filling_rejects_bad_sum():
+    with pytest.raises(ValueError):
+        fill_assignment([0.5, 0.2], [0, 1], stragglers=0)
+
+
+def test_s0_degenerates_to_per_machine_shares():
+    mu = np.array([0.25, 0.5, 0.25])
+    ta = fill_assignment(mu, [0, 1, 2], stragglers=0)
+    verify_assignment(ta, mu, [0, 1, 2], stragglers=0)
+    assert all(len(g) == 1 for g in ta.groups)

@@ -1,0 +1,106 @@
+"""Chunked CE vs full-softmax oracle; AdamW vs reference; schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.losses import chunked_cross_entropy, lm_loss
+from repro.optim import adamw, warmup_cosine
+
+
+def _full_ce(hidden, unembed, labels, mask):
+    logits = (hidden @ unembed).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    score = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - score) * mask), jnp.sum(mask)
+
+
+@pytest.mark.parametrize("chunk", [3, 16, 64, 100])
+def test_chunked_ce_matches_full(chunk):
+    b, s, d, v = 2, 50, 16, 97
+    ks = jax.random.split(jax.random.PRNGKey(chunk), 3)
+    h = jax.random.normal(ks[0], (b, s, d))
+    u = jax.random.normal(ks[1], (d, v)) * 0.3
+    y = jax.random.randint(ks[2], (b, s), 0, v)
+    m = (jnp.arange(s)[None, :] < 37).astype(jnp.float32) * jnp.ones((b, 1))
+    nll_c, n_c = chunked_cross_entropy(h, u, y, m, chunk=chunk)
+    nll_f, n_f = _full_ce(h, u, y, m)
+    np.testing.assert_allclose(float(nll_c), float(nll_f), rtol=1e-5)
+    assert float(n_c) == float(n_f)
+
+
+def test_chunked_ce_grads_match():
+    b, s, d, v = 1, 24, 8, 31
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (b, s, d))
+    u = jax.random.normal(ks[1], (d, v)) * 0.3
+    y = jax.random.randint(ks[2], (b, s), 0, v)
+    m = jnp.ones((b, s))
+    g_c = jax.grad(lambda uu: chunked_cross_entropy(h, uu, y, m, chunk=7)[0])(u)
+    g_f = jax.grad(lambda uu: _full_ce(h, uu, y, m)[0])(u)
+    np.testing.assert_allclose(np.asarray(g_c), np.asarray(g_f), rtol=1e-4, atol=1e-5)
+
+
+def test_lm_loss_shift():
+    """lm_loss must predict token t+1 from hidden t (no leakage)."""
+    b, s, d, v = 1, 8, 4, 11
+    h = jnp.zeros((b, s, d))
+    u = jnp.zeros((d, v))
+    toks = jnp.arange(s)[None, :] % v
+    nll, m = lm_loss(h, u, toks, chunk=4)
+    # uniform logits -> nll = (s-1) * log(v)
+    np.testing.assert_allclose(float(nll), (s - 1) * np.log(v), rtol=1e-5)
+    assert float(m["n_tokens"]) == s - 1
+
+
+# ------------------------------------------------------------------ #
+# AdamW
+# ------------------------------------------------------------------ #
+def _ref_adamw(g, m, v, p, lr, b1, b2, eps, wd, t):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    p = p - lr * (mh / (np.sqrt(vh) + eps) + wd * p)
+    return p, m, v
+
+
+def test_adamw_matches_reference():
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(5, 3)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = adamw.init(params)
+    p_ref, m_ref, v_ref = p0.copy(), np.zeros_like(p0), np.zeros_like(p0)
+    for t in range(1, 6):
+        g = rng.normal(size=p0.shape).astype(np.float32) * 0.1
+        params, state, met = adamw.update(
+            {"w": jnp.asarray(g)}, state, params, lr=1e-2, clip_norm=None,
+            b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+        )
+        p_ref, m_ref, v_ref = _ref_adamw(g, m_ref, v_ref, p_ref, 1e-2, 0.9, 0.95, 1e-8, 0.1, t)
+        np.testing.assert_allclose(np.asarray(params["w"]), p_ref, rtol=2e-5, atol=2e-6)
+
+
+def test_adamw_clipping():
+    params = {"w": jnp.ones((4,))}
+    state = adamw.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, met = adamw.update(g, state, params, lr=0.0, clip_norm=1.0)
+    assert float(met["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_no_decay_on_vectors():
+    params = {"b": jnp.ones((4,))}  # ndim 1 -> no weight decay
+    state = adamw.init(params)
+    new, _, _ = adamw.update({"b": jnp.zeros((4,))}, state, params, lr=1.0,
+                             weight_decay=0.5, clip_norm=None)
+    np.testing.assert_allclose(np.asarray(new["b"]), 1.0)
+
+
+def test_warmup_cosine():
+    assert float(warmup_cosine(0, 1.0, 10, 100)) == 0.0
+    assert float(warmup_cosine(10, 1.0, 10, 100)) == pytest.approx(1.0)
+    assert float(warmup_cosine(100, 1.0, 10, 100)) == pytest.approx(0.1)
+    mid = float(warmup_cosine(55, 1.0, 10, 100))
+    assert 0.1 < mid < 1.0

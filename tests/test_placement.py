@@ -1,0 +1,97 @@
+"""Placement invariants (paper §II-III)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LostTileError,
+    cyclic_placement,
+    custom_placement,
+    make_placement,
+    man_placement,
+    repetition_placement,
+)
+
+
+def test_repetition_matches_paper_fig1a():
+    p = repetition_placement(6, 6, 3)
+    # group {0,1,2} holds tiles 0..2; group {3,4,5} holds 3..5
+    assert p.holders[0] == (0, 1, 2)
+    assert p.holders[3] == (3, 4, 5)
+    z = p.storage_sets()
+    assert z[0] == frozenset({0, 1, 2}) and z[5] == frozenset({3, 4, 5})
+
+
+def test_cyclic_matches_paper_fig1b():
+    p = cyclic_placement(6, 6, 3)
+    assert p.holders[0] == (0, 1, 2)
+    assert p.holders[5] == (0, 1, 5)
+    assert all(len(h) == 3 for h in p.holders)
+
+
+def test_man_counts():
+    p = man_placement(6, 3)
+    assert p.n_tiles == 20  # C(6,3)
+    z = p.storage_sets()
+    assert all(len(s) == 10 for s in z)  # C(5,2)
+
+
+def test_repetition_requires_divisibility():
+    with pytest.raises(ValueError):
+        repetition_placement(6, 6, 4)
+    with pytest.raises(ValueError):
+        repetition_placement(6, 5, 3)
+
+
+def test_restrict_and_loss_tolerance():
+    p = cyclic_placement(6, 6, 3)
+    assert p.max_tolerable_losses() == 2
+    r = p.restrict([0, 1, 2, 3])
+    assert all(all(n in (0, 1, 2, 3) for n in h) for h in r.holders)
+    with pytest.raises(LostTileError):
+        # tile 3 lives on {3,4,5}; removing all three loses it
+        p.restrict([0, 1, 2])
+
+
+def test_holder_matrix_consistency():
+    p = man_placement(5, 2)
+    H = p.holder_matrix()
+    for g, hs in enumerate(p.holders):
+        assert set(np.flatnonzero(H[g])) == set(hs)
+
+
+@given(
+    n=st.integers(2, 10),
+    j=st.integers(1, 4),
+    g_mult=st.integers(1, 3),
+)
+@settings(max_examples=50, deadline=None)
+def test_cyclic_placement_properties(n, j, g_mult):
+    j = min(j, n)
+    g = n * g_mult
+    p = cyclic_placement(n, g, j)
+    p.validate()
+    assert p.replication == j
+    # every machine stores the same number of tiles (cyclic symmetry)
+    z = p.storage_sets()
+    sizes = {len(s) for s in z}
+    assert len(sizes) == 1
+    assert sizes.pop() == g * j // n
+
+
+def test_custom_placement_validation():
+    with pytest.raises(ValueError):
+        custom_placement(3, [(0, 0)])  # duplicate holder
+    with pytest.raises(ValueError):
+        custom_placement(3, [(5,)])  # out of range
+    p = custom_placement(3, [(0, 2), (1,)])
+    assert p.replication == 1
+
+
+def test_factory():
+    assert make_placement("man", 6, 0, 3).n_tiles == 20
+    with pytest.raises(ValueError):
+        make_placement("nope", 6, 6, 3)

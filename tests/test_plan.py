@@ -1,0 +1,111 @@
+"""Compiled plan: integerization, coverage under stragglers, transition waste."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    compile_plan,
+    cyclic_placement,
+    integerize_fractions,
+    man_placement,
+    repetition_placement,
+    solve_assignment,
+    transition_waste,
+    verify_plan_coverage,
+)
+
+
+@given(
+    seed=st.integers(0, 10 ** 6),
+    parts=st.integers(1, 8),
+    rows=st.integers(1, 4096),
+    align=st.sampled_from([1, 8, 128]),
+)
+@settings(max_examples=80, deadline=None)
+def test_integerize_fractions(seed, parts, rows, align):
+    rng = np.random.default_rng(seed)
+    f = rng.dirichlet(np.ones(parts))
+    sizes = integerize_fractions(f, rows, align)
+    assert sizes.sum() == rows
+    assert np.all(sizes >= 0)
+    if align > 1:
+        # at most one non-empty segment starts off-alignment (the one after
+        # the remainder-carrying segment); empty segments are irrelevant
+        starts = np.cumsum(sizes) - sizes
+        non_aligned = np.sum((starts % align != 0) & (sizes > 0))
+        assert non_aligned <= 1
+
+
+@given(
+    seed=st.integers(0, 10 ** 5),
+    n=st.integers(4, 8),
+    s=st.integers(0, 2),
+)
+@settings(max_examples=30, deadline=None)
+def test_plan_coverage_under_all_straggler_sets(seed, n, s):
+    j = 3
+    s = min(s, j - 1)
+    rng = np.random.default_rng(seed)
+    speeds = rng.exponential(1.0, n) + 0.05
+    p = cyclic_placement(n, n, j)
+    sol = solve_assignment(p, speeds, stragglers=s, lexicographic=False)
+    plan = compile_plan(p, sol, rows_per_tile=96, stragglers=s, speeds=speeds)
+    sets = [()] + [c for c in itertools.combinations(range(n), s)] if s else [()]
+    verify_plan_coverage(plan, n, straggler_sets=sets)
+
+
+def test_include_mask_raises_beyond_tolerance():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), stragglers=1)
+    plan = compile_plan(p, sol, rows_per_tile=10, stragglers=1)
+    with pytest.raises(RuntimeError):
+        # two stragglers that share a segment (adjacent in cyclic groups)
+        bad = None
+        for seg in plan.segments:
+            if len(seg.group) == 2:
+                bad = seg.group
+                break
+        plan.include_mask(bad)
+
+
+def test_plan_loads_match_solution():
+    p = man_placement(6, 3)
+    speeds = np.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0])
+    sol = solve_assignment(p, speeds)
+    plan = compile_plan(p, sol, rows_per_tile=2000, speeds=speeds)
+    assert np.allclose(plan.loads(), sol.loads, atol=2e-2)
+
+
+def test_row_alignment():
+    p = cyclic_placement(4, 4, 2)
+    sol = solve_assignment(p, [1.0, 2.0, 3.0, 4.0])
+    plan = compile_plan(p, sol, rows_per_tile=1024, row_align=128, speeds=[1, 2, 3, 4])
+    for seg in plan.segments:
+        last = seg.row_start + seg.row_len == 1024
+        assert seg.row_start % 128 == 0
+        assert seg.row_len % 128 == 0 or last
+
+
+def test_t_max_padding():
+    p = cyclic_placement(4, 4, 2)
+    sol = solve_assignment(p, np.ones(4))
+    plan = compile_plan(p, sol, rows_per_tile=8, t_max=17)
+    assert plan.t_max == 17
+    with pytest.raises(ValueError):
+        compile_plan(p, sol, rows_per_tile=8, t_max=0)
+
+
+def test_transition_waste():
+    prev = {0: {0, 1}, 1: {2, 3}, 2: {4, 5}}
+    # machine 2 preempted; its rows must move (necessary = 2); machine 0
+    # additionally swaps row 1 for row 3 (waste).
+    new = {0: {0, 3, 4, 5}, 1: {2, 1}}
+    w = transition_waste(prev, new, preempted=[2])
+    # changes: m0: +3,+4,+5,-1 (4); m1: +1,-3 (2) => 6 total; necessary = 2 orphans
+    assert w == 4
+    # a perfect transition has zero waste
+    new2 = {0: {0, 1, 4}, 1: {2, 3, 5}}
+    assert transition_waste(prev, new2, preempted=[2]) == 0

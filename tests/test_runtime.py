@@ -1,0 +1,199 @@
+"""Runtime substrate: simulation semantics, checkpointing, pipeline,
+scheduler, compression, hlo cost analyzer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    USECScheduler,
+    cyclic_placement,
+    compile_plan,
+    solve_assignment,
+)
+from repro.data import TokenPipeline
+from repro.runtime import (
+    SpeedProcess,
+    StragglerProcess,
+    exponential_speeds,
+    restore_checkpoint,
+    save_checkpoint,
+    latest_checkpoint,
+    simulate_step,
+    worker_times,
+)
+
+
+# ------------------------------------------------------------------ #
+# Simulation
+# ------------------------------------------------------------------ #
+def _plan(s=None, S=1, speeds=None):
+    p = cyclic_placement(6, 6, 3)
+    speeds = np.array([1.0, 2.0, 4.0, 8.0, 16.0, 32.0]) if speeds is None else speeds
+    sol = solve_assignment(p, speeds, stragglers=S)
+    return compile_plan(p, sol, rows_per_tile=12, stragglers=S, speeds=speeds), speeds
+
+
+def test_simulate_no_drop_completion_bounded_by_cstar():
+    plan, speeds = _plan()
+    t = simulate_step(plan, speeds)
+    assert t.completion_time <= max(worker_times(plan, speeds)) + 1e-12
+    # redundancy can finish before the slowest worker
+    assert t.completion_time > 0
+
+
+def test_simulate_drop_within_tolerance():
+    plan, speeds = _plan(S=1)
+    t0 = simulate_step(plan, speeds).completion_time
+    t1 = simulate_step(plan, speeds, dropped=(5,)).completion_time
+    assert t1 >= t0 - 1e-12  # losing the fastest cannot help
+
+
+def test_simulate_drop_beyond_tolerance_raises():
+    plan, speeds = _plan(S=0)
+    heavy = [w for w in range(6) if plan.n_valid[w] > 0][:1]
+    with pytest.raises(RuntimeError):
+        simulate_step(plan, speeds, dropped=tuple(heavy))
+
+
+def test_speed_and_straggler_processes():
+    sp = SpeedProcess(base=np.ones(4), jitter_sigma=0.1, drift_sigma=0.05, seed=0)
+    draws = np.stack([sp.sample() for _ in range(50)])
+    assert draws.shape == (50, 4) and (draws > 0).all()
+    st = StragglerProcess(count=2, mode="slowest", seed=0)
+    out = st.sample([0, 1, 2, 3], np.array([3.0, 1.0, 2.0, 4.0]))
+    assert out == (1, 2)
+    assert StragglerProcess(count=0).sample([0, 1], np.ones(2)) == ()
+    s = exponential_speeds(100, seed=1)
+    assert (s > 0).all()
+
+
+# ------------------------------------------------------------------ #
+# Scheduler (Algorithm 1 host loop)
+# ------------------------------------------------------------------ #
+def test_scheduler_adapts_speeds():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=8, initial_speeds=np.ones(4), gamma=0.5)
+    plan1 = sched.plan_step(available=[0, 1, 2, 3])
+    # worker 3 measures 9x faster -> EWMA moves, next plan gives it more load
+    sched.report({3: plan1.plan.loads()[3]}, {3: plan1.plan.loads()[3] / 9.0})
+    plan2 = sched.plan_step(available=[0, 1, 2, 3])
+    assert sched.estimator.speeds[3] == pytest.approx(5.0)
+    assert plan2.plan.loads()[3] > plan1.plan.loads()[3]
+    assert plan2.c_star <= plan1.c_star + 1e-9
+
+
+def test_scheduler_homogeneous_mode_ignores_speeds():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=8, initial_speeds=[1, 1, 1, 10],
+                          homogeneous=True)
+    plan = sched.plan_step(available=[0, 1, 2, 3])
+    loads = plan.plan.loads()
+    assert np.allclose(loads, loads[0])
+
+
+def test_scheduler_elastic_membership():
+    p = cyclic_placement(6, 6, 3)
+    sched = USECScheduler(p, rows_per_tile=6, initial_speeds=np.ones(6))
+    plan = sched.plan_step(available=[0, 1, 3, 4, 5])
+    assert plan.plan.loads()[2] == 0
+
+
+# ------------------------------------------------------------------ #
+# Checkpointing
+# ------------------------------------------------------------------ #
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,), jnp.bfloat16)},
+        "opt": {"count": jnp.int32(7)},
+    }
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 5, tree, extra={"note": "hello"})
+    save_checkpoint(d, 9, tree, extra={"note": "later"})
+    assert latest_checkpoint(d).endswith("step_000000009")
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    step, restored, extra = restore_checkpoint(latest_checkpoint(d), like)
+    assert step == 9 and extra["note"] == "later"
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(latest_checkpoint(d), {"w": jnp.ones((3, 3))})
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"w": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(latest_checkpoint(d), {"w": jnp.ones((2,)), "extra": jnp.ones((1,))})
+
+
+# ------------------------------------------------------------------ #
+# Data pipeline
+# ------------------------------------------------------------------ #
+def test_pipeline_determinism_and_consistency():
+    cfg = get_config("stablelm-1.6b").reduced()
+    p = cyclic_placement(4, 8, 2)
+    pipe = TokenPipeline(cfg, p, seq_len=16, tile_samples=2, seed=3)
+    a = pipe.staged_for_step(7)
+    b = pipe.staged_for_step(7)
+    np.testing.assert_array_equal(a.arrays["tokens"], b.arrays["tokens"])
+    # staged copies agree with the global batch, on every holder
+    gb = pipe.global_batch(7)["tokens"]
+    for g, holders in enumerate(p.holders):
+        tile = gb[g * 2:(g + 1) * 2]
+        for w in holders:
+            slot = a.slot_of[w, g]
+            np.testing.assert_array_equal(a.arrays["tokens"][w, slot], tile)
+    # different steps differ
+    c = pipe.staged_for_step(8)
+    assert not np.array_equal(a.arrays["tokens"], c.arrays["tokens"])
+
+
+def test_pipeline_vlm_schema():
+    cfg = get_config("internvl2-2b").reduced()
+    p = cyclic_placement(2, 4, 2)
+    pipe = TokenPipeline(cfg, p, seq_len=32, tile_samples=1, seed=0)
+    st = pipe.staged_for_step(0)
+    assert "patches" in st.arrays and "tokens" in st.arrays
+    assert st.arrays["patches"].dtype == np.float32
+
+
+# ------------------------------------------------------------------ #
+# HLO cost analyzer
+# ------------------------------------------------------------------ #
+def test_hlo_cost_scan_multiplication():
+    from repro.launch.hlo_cost import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y.sum()
+
+    xs = jnp.ones((32, 32))
+    txt = jax.jit(f).lower(xs, xs).compile().as_text()
+    c = analyze(txt)
+    assert c.flops == pytest.approx(8 * 2 * 32 ** 3, rel=0.05)
+    assert c.dynamic_whiles == 0
+
+
+def test_hlo_cost_dynamic_while_default():
+    from repro.launch.hlo_cost import analyze
+
+    def f(x, n):
+        return jax.lax.fori_loop(0, n, lambda i, c: jnp.tanh(c @ c), x)
+
+    txt = jax.jit(f).lower(jnp.ones((16, 16)), jnp.int32(5)).compile().as_text()
+    c = analyze(txt, default_trips=5)
+    assert c.flops == pytest.approx(5 * 2 * 16 ** 3, rel=0.05)
+    assert c.dynamic_whiles == 1

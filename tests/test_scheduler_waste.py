@@ -1,0 +1,53 @@
+"""Transition-waste-averse re-planning (extension; metric from the paper's
+ref [2], Dau et al. ISIT'20)."""
+
+import numpy as np
+
+from repro.core import USECScheduler, cyclic_placement, transition_waste
+
+
+def _rows(plan):
+    return {n: plan.rows_of(n) for n in range(plan.n_machines)}
+
+
+def test_waste_averse_reuses_plan_under_small_drift():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=np.ones(4),
+                          gamma=0.5, waste_epsilon=0.10)
+    a = sched.plan_step(available=[0, 1, 2, 3])
+    # tiny drift: worker 2 measures 5% faster
+    sched.report({2: a.plan.loads()[2]}, {2: a.plan.loads()[2] / 1.05})
+    b = sched.plan_step(available=[0, 1, 2, 3])
+    assert b.plan is a.plan  # reused verbatim -> zero transition waste
+    w = transition_waste(_rows(a.plan), _rows(b.plan), preempted=[])
+    assert w == 0
+
+
+def test_waste_averse_replans_on_large_drift():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=np.ones(4),
+                          gamma=1.0, waste_epsilon=0.10)
+    a = sched.plan_step(available=[0, 1, 2, 3])
+    # massive drift: worker 3 is 8x faster -> old plan far from optimal
+    sched.report({3: a.plan.loads()[3]}, {3: a.plan.loads()[3] / 8.0})
+    b = sched.plan_step(available=[0, 1, 2, 3])
+    assert b.plan is not a.plan
+    assert b.plan.loads()[3] > a.plan.loads()[3]
+
+
+def test_waste_averse_replans_on_membership_change():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=np.ones(4),
+                          waste_epsilon=0.5)
+    a = sched.plan_step(available=[0, 1, 2, 3])
+    b = sched.plan_step(available=[0, 1, 2])  # preemption forces a re-plan
+    assert b.plan is not a.plan
+    assert b.plan.loads()[3] == 0
+
+
+def test_waste_off_by_default_replans_every_step():
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=np.ones(4))
+    a = sched.plan_step(available=[0, 1, 2, 3])
+    b = sched.plan_step(available=[0, 1, 2, 3])
+    assert b.plan is not a.plan  # fresh object (same contents is fine)
