@@ -18,11 +18,83 @@ import time
 import numpy as np
 
 from repro.core import (
+    compile_plan,
     cyclic_placement,
     man_placement,
     repetition_placement,
     solve_assignment,
 )
+from repro.runtime.simulate import (
+    StragglerProcess,
+    build_plan_stack,
+    simulate_batch,
+    simulate_step,
+)
+
+
+def run_batched_sweep(traces=1000, seed=0, csv=True):
+    """The batched scenario engine vs a scalar simulate_step loop.
+
+    Plans each placement once (S=1, heterogeneous speeds), then evaluates
+    ``traces`` (jittered speeds, uniform 1-straggler) scenarios per placement
+    — first by looping the scalar oracle, then with ONE simulate_batch call
+    on the plan stack. Asserts exact agreement and reports the speedup
+    (acceptance bar: >= 10x on a 1000-trace sweep).
+    """
+    rng = np.random.default_rng(seed)
+    placements = {
+        "repetition": repetition_placement(6, 6, 3),
+        "cyclic": cyclic_placement(6, 6, 3),
+        "man": man_placement(6, 3),
+    }
+    s_plan = np.maximum(rng.exponential(1.0, 6), 1e-3)
+    plans = []
+    for name, p in placements.items():
+        sol = solve_assignment(p, s_plan, stragglers=1, lexicographic=False)
+        plans.append(compile_plan(p, sol, rows_per_tile=96, stragglers=1,
+                                  speeds=s_plan))
+    P = len(plans)
+    B = traces * P
+    jitter = np.exp(rng.normal(0.0, 0.3, (B, 6)))
+    speeds = np.maximum(s_plan[None, :] * jitter, 1e-6)
+    plan_index = np.repeat(np.arange(P), traces)
+    proc = StragglerProcess(count=1, mode="uniform", seed=seed)
+    drop = proc.sample_batch(range(6), speeds, 6)
+
+    # scalar loop (the oracle)
+    t0 = time.perf_counter()
+    scalar = np.empty(B)
+    for b in range(B):
+        scalar[b] = simulate_step(
+            plans[plan_index[b]], speeds[b],
+            dropped=tuple(np.flatnonzero(drop[b])),
+        ).completion_time
+    t_scalar = time.perf_counter() - t0
+
+    # batched engine
+    stack = build_plan_stack(plans)
+    t0 = time.perf_counter()
+    bt = simulate_batch(stack, speeds, dropped=drop, plan_index=plan_index)
+    t_batch = time.perf_counter() - t0
+
+    exact = bool(np.array_equal(scalar, bt.completion_times))
+    speedup = t_scalar / max(t_batch, 1e-12)
+    rows = [
+        (f"batch_sweep_{B}_traces_exact_match", t_batch * 1e6, f"{exact}"),
+        (f"batch_sweep_{B}_traces_speedup", t_batch * 1e6,
+         f"scalar {t_scalar * 1e3:.1f} ms / batch {t_batch * 1e3:.1f} ms "
+         f"= {speedup:.1f}x (bar: >= 10x)"),
+    ]
+    comp = bt.completion_times.reshape(P, traces)
+    for i, name in enumerate(placements):
+        c = comp[i][np.isfinite(comp[i])]
+        rows.append((f"batch_sweep_completion_{name}", t_batch * 1e6,
+                     f"mean {c.mean():.4f} p95 {np.percentile(c, 95):.4f}"))
+    if csv:
+        for name, us_, derived in rows:
+            print(f"{name},{us_:.1f},{derived}")
+    assert exact, "simulate_batch diverged from the scalar oracle"
+    return rows
 
 
 def run(draws=5000, seed=0, csv=True):
@@ -76,3 +148,4 @@ if __name__ == "__main__":
     import sys
 
     run(draws=int(sys.argv[1]) if len(sys.argv) > 1 else 5000)
+    run_batched_sweep(traces=int(sys.argv[2]) if len(sys.argv) > 2 else 1000)

@@ -32,6 +32,8 @@ def main(argv=None) -> None:
     bench_paper_examples.run()
     print("# --- paper Fig. 2 / Table I: placement Monte-Carlo ---")
     bench_placements.run(draws=5000 if args.full else 1000)
+    print("# --- batched scenario engine: 1000-trace sweep vs scalar loop ---")
+    bench_placements.run_batched_sweep(traces=1000)
     print("# --- paper Remark 1 + filling algorithm + solver scaling ---")
     bench_straggler_tradeoff.run()
     print("# --- paper §V Fig. 4: power iteration on heterogeneous workers ---")

@@ -125,6 +125,7 @@ def solve_assignment(
 
     G = restricted.n_tiles
     edges = restricted.edges()  # (g, n) with n a *global* machine index
+    holder_mask = restricted.holder_matrix()  # (G, N) bool, reused throughout
     supply = np.full(G, need)
     need_total = need * G
     tol = 1e-9 * max(1.0, need_total)
@@ -132,17 +133,22 @@ def solve_assignment(
     def feasible_with_caps(node_cap: np.ndarray):
         return transportation_feasible(supply, node_cap, edges, edge_cap=1.0, tol=tol)
 
-    def caps_for(c: float, frozen: Dict[int, float]) -> np.ndarray:
+    # Frozen capacities as a dense array (NaN = unfrozen) so per-candidate
+    # cap vectors are one vectorized select, not a Python loop over machines.
+    avail_arr = np.asarray(avail, dtype=np.int64)
+    frozen_arr = np.full(N, np.nan)
+
+    def caps_for(c: float) -> np.ndarray:
         node_cap = np.zeros(N)
-        for n in avail:
-            node_cap[n] = frozen.get(n, c * s_full[n])
+        fv = frozen_arr[avail_arr]
+        node_cap[avail_arr] = np.where(
+            np.isnan(fv), c * s_full[avail_arr], fv)
         return node_cap
 
     # ------------------------------------------------------------------ #
     # Lexicographic rounds: each round minimizes max load/speed over the
     # still-unfrozen machines, then freezes the binding min-cut machines.
     # ------------------------------------------------------------------ #
-    frozen: Dict[int, float] = {}
     unfrozen: Set[int] = set(avail)
     c_star: Optional[float] = None
     first_cut_tiles: Tuple[int, ...] = ()
@@ -150,8 +156,8 @@ def solve_assignment(
     mu_star = np.zeros((G, N))
 
     # Global upper bound: every machine computes everything it stores.
-    z = restricted.storage_sets()
-    c_hi0 = max(need * len(z[n]) / s_full[n] for n in avail) + 1e-12
+    stored_counts = holder_mask.sum(axis=0)
+    c_hi0 = float(np.max(need * stored_counts[avail_arr] / s_full[avail_arr])) + 1e-12
 
     c_prev = c_hi0
     max_rounds = max(1, int(lex_rounds)) if lexicographic else 1
@@ -162,14 +168,14 @@ def solve_assignment(
             # Round budget exhausted: freeze the remainder at the last level.
             # c_star (round 1) is already exact; only balance is truncated.
             for n in list(unfrozen):
-                frozen[n] = c_prev * s_full[n]
+                frozen_arr[n] = c_prev * s_full[n]
             unfrozen.clear()
             break
         # Feasibility at c = 0 for unfrozen -> they can all idle; freeze at 0.
-        ok0, mu0, _, _ = feasible_with_caps(caps_for(0.0, frozen))
+        ok0, mu0, _, _ = feasible_with_caps(caps_for(0.0))
         if ok0:
             for n in unfrozen:
-                frozen[n] = 0.0
+                frozen_arr[n] = 0.0
             mu_star = mu0
             if c_star is None:
                 c_star = 0.0
@@ -177,33 +183,33 @@ def solve_assignment(
 
         # Warm-started bracket: levels are non-increasing across rounds.
         lo, hi = 0.0, c_prev * (1 + 1e-12) + 1e-15
-        ok_hi, mu_hi, _, _ = feasible_with_caps(caps_for(hi, frozen))
+        ok_hi, mu_hi, _, _ = feasible_with_caps(caps_for(hi))
         if not ok_hi:  # pragma: no cover - hi is feasible by construction
             raise RuntimeError("internal error: upper bracket infeasible")
         mu_best = mu_hi
         iters = _BISECT_ITERS if _round == 0 else 40
         for _ in range(iters):
             mid = 0.5 * (lo + hi)
-            ok, mu_mid, _, _ = feasible_with_caps(caps_for(mid, frozen))
+            ok, mu_mid, _, _ = feasible_with_caps(caps_for(mid))
             if ok:
                 hi, mu_best = mid, mu_mid
             else:
                 lo = mid
 
         # Min-cut at the infeasible end certifies the exact round optimum.
-        _, _, dinic, _ = feasible_with_caps(caps_for(lo, frozen))
+        _, _, dinic, _ = feasible_with_caps(caps_for(lo))
         reach = dinic.min_cut_reachable(G + N)  # source node index
         A = [g for g in range(G) if reach[g]]
         B = [n for n in avail if reach[G + n]]
         B_un = [n for n in B if n in unfrozen]
         c_round = hi
-        c_exact = _cut_ratio(restricted, s_full, A, B, B_un, frozen, need)
+        c_exact = _cut_ratio(holder_mask, s_full, A, B, B_un, frozen_arr, need)
         if (
             c_exact is not None
             and lo - tol <= c_exact <= hi + 1e-6 * max(1.0, hi)
         ):
             ok, mu_exact, _, _ = feasible_with_caps(
-                caps_for(c_exact * (1 + 1e-12) + 1e-15, frozen)
+                caps_for(c_exact * (1 + 1e-12) + 1e-15)
             )
             if ok:
                 c_round, mu_best = c_exact, mu_exact
@@ -229,7 +235,7 @@ def solve_assignment(
             mmax = rel.max()
             to_freeze = {n for n in unfrozen if rel[n] >= mmax - 1e-9}
         for n in to_freeze:
-            frozen[n] = c_round * s_full[n]
+            frozen_arr[n] = c_round * s_full[n]
             unfrozen.discard(n)
         c_prev = c_round
 
@@ -238,7 +244,6 @@ def solve_assignment(
     # Clean numerical dust and re-normalize rows exactly to 1+S.
     mu_star[mu_star < 1e-12] = 0.0
     np.clip(mu_star, 0.0, 1.0, out=mu_star)
-    holder_mask = restricted.holder_matrix()
     mu_star[~holder_mask] = 0.0
     row = mu_star.sum(axis=1)
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -280,24 +285,25 @@ def _repair_row(row: np.ndarray, mask: np.ndarray, need: float) -> None:
 
 
 def _cut_ratio(
-    placement: Placement,
+    holder_mask: np.ndarray,
     speeds: np.ndarray,
     tiles: List[int],
     machines_B: List[int],
     machines_B_unfrozen: List[int],
-    frozen: Dict[int, float],
+    frozen_arr: np.ndarray,
     need: float,
 ) -> Optional[float]:
-    """Duality ratio  [need·|A| − |E(A, N∖B)| − frozen_cap(B∩frozen)] / s(B∩unfrozen)."""
+    """Duality ratio  [need·|A| − |E(A, N∖B)| − frozen_cap(B∩frozen)] / s(B∩unfrozen).
+
+    ``frozen_arr`` is the (N,) frozen-capacity vector, NaN on unfrozen
+    machines (the solver's single source of truth for frozen state).
+    """
     if not machines_B_unfrozen:
         return None
-    Bset = set(machines_B)
-    e_out = 0
-    for g in tiles:
-        for n in placement.holders[g]:
-            if n not in Bset:
-                e_out += 1
-    cap_frozen = sum(frozen[n] for n in machines_B if n in frozen)
+    in_B = np.zeros(holder_mask.shape[1], dtype=bool)
+    in_B[machines_B] = True
+    e_out = int(holder_mask[tiles][:, ~in_B].sum())
+    cap_frozen = float(np.nansum(frozen_arr[machines_B]))
     num = need * len(tiles) - e_out - cap_frozen
     den = float(np.sum(speeds[machines_B_unfrozen]))
     if den <= 0 or num <= 0:

@@ -40,10 +40,17 @@ class TileAssignment:
     def n_sets(self) -> int:
         return len(self.groups)
 
+    def group_matrix(self) -> np.ndarray:
+        """(F, L) int array of machine ids, one row per row-set."""
+        if not self.groups:
+            return np.zeros((0, 0), dtype=np.int64)
+        return np.asarray(self.groups, dtype=np.int64)
+
     def load_of(self, machine: int) -> float:
-        return float(
-            sum(a for a, p in zip(self.fractions, self.groups) if machine in p)
-        )
+        if not self.groups:
+            return 0.0
+        member = (self.group_matrix() == int(machine)).any(axis=1)
+        return float(self.fractions[member].sum())
 
 
 def fill_assignment(
@@ -65,6 +72,7 @@ def fill_assignment(
     """
     m = np.asarray(mu_g, dtype=np.float64).copy()
     ids = list(machines)
+    ids_arr = np.asarray(ids, dtype=np.int64)
     if m.ndim != 1 or len(ids) != m.size:
         raise ValueError("mu_g and machines must align")
     L = 1 + int(stragglers)
@@ -92,10 +100,14 @@ def fill_assignment(
             )
         l_prime = float(m[nz].sum())
         order = nz[np.argsort(m[nz], kind="stable")]  # ascending
-        # P = smallest + (L-1) largest  (all of them when n_prime == L)
-        group_idx = [order[0]] + list(order[n_prime - L + 1:]) if L > 1 else [order[0]]
-        group_idx = list(dict.fromkeys(int(i) for i in group_idx))  # dedupe, keep order
-        if len(group_idx) != L:  # pragma: no cover - only on degenerate ties
+        # P = smallest + (L-1) largest  (all of them when n_prime == L).
+        # The indices are distinct by construction (order is a permutation);
+        # the size check guards against degenerate slicing only.
+        group_idx = (
+            np.concatenate((order[:1], order[n_prime - L + 1:]))
+            if L > 1 else order[:1]
+        )
+        if group_idx.size != L:  # pragma: no cover - only on degenerate ties
             raise RuntimeError("filling produced a malformed group")
         if n_prime >= L + 1:
             kth_largest_excl = float(m[order[n_prime - L]])  # ell[N'-L+1]
@@ -107,11 +119,10 @@ def fill_assignment(
             # Numerical stall: force-zero the smallest element.
             m[order[0]] = 0.0
             continue
-        for i in group_idx:
-            m[i] -= alpha
+        m[group_idx] -= alpha
         m[np.abs(m) < _ZERO] = 0.0
         fractions.append(alpha)
-        groups.append(tuple(sorted(ids[i] for i in group_idx)))
+        groups.append(tuple(np.sort(ids_arr[group_idx]).tolist()))
     else:  # pragma: no cover
         raise RuntimeError("filling did not terminate within N_g iterations")
 
@@ -155,12 +166,28 @@ def verify_assignment(
     L = 1 + int(stragglers)
     if abs(float(np.sum(assign.fractions)) - 1.0) > tol:
         raise AssertionError("fractions do not sum to 1")
-    for f, p in enumerate(assign.groups):
-        if len(set(p)) != L:
-            raise AssertionError(f"group {f} is not {L} distinct machines: {p}")
-    for mid, target in zip(machines, mu_g):
-        got = assign.load_of(int(mid))
-        if abs(got - float(target)) > tol:
+    gm = assign.group_matrix()
+    if gm.shape[0]:
+        if gm.shape[1] != L:
+            raise AssertionError(f"groups are not {L} machines wide: {gm.shape}")
+        srt = np.sort(gm, axis=1)
+        dup = (srt[:, 1:] == srt[:, :-1]).any(axis=1) if L > 1 else np.zeros(gm.shape[0], bool)
+        if dup.any():
+            f = int(np.argmax(dup))
             raise AssertionError(
-                f"machine {mid}: realized load {got} != mu {float(target)}"
+                f"group {f} is not {L} distinct machines: {assign.groups[f]}"
             )
+    ids = np.asarray(list(machines), dtype=np.int64)
+    # Realized per-machine load, scattered over the (possibly non-contiguous)
+    # global machine ids via index mapping.
+    realized = np.zeros(ids.size)
+    if gm.shape[0]:
+        pos = np.searchsorted(np.sort(ids), gm.ravel())
+        pos = np.argsort(ids, kind="stable")[pos]
+        np.add.at(realized, pos, np.repeat(np.asarray(assign.fractions), L))
+    err = np.abs(realized - np.asarray(mu_g, dtype=np.float64))
+    if np.any(err > tol):
+        i = int(np.argmax(err))
+        raise AssertionError(
+            f"machine {ids[i]}: realized load {realized[i]} != mu {float(mu_g[i])}"
+        )

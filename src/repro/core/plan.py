@@ -16,6 +16,11 @@ contiguous row range of one tile assigned to a group of ``1 + S`` machines.
 Row fractions are integerized by the largest-remainder method at a
 configurable ``row_align`` granularity (TPU kernels want MXU-aligned block
 boundaries; the paper's EC2 setting uses align=1).
+
+The hot paths here (plan packing, winner masks, coverage checks, loads) are
+vectorized NumPy; :mod:`repro.core.reference` keeps the original loop forms
+as the differential-testing oracle, and the property suite asserts bitwise
+identity between the two on randomized instances.
 """
 
 from __future__ import annotations
@@ -52,6 +57,9 @@ class CompiledPlan:
     seg_tile/(seg_start, seg_len): which rows of which tile slot ``t`` of
       worker ``n`` computes; pads have len 0 and tile -1.
     n_valid: per-worker live segment count (drives per-worker loop bounds).
+
+    Per-*segment* views (``seg_group``, ``seg_priority``, ...) are derived
+    lazily and cached — they are what the batched simulator consumes.
     """
 
     n_machines: int
@@ -64,17 +72,58 @@ class CompiledPlan:
     seg_id: np.ndarray       # (N, T_max) int32  -> index into ``segments``
     n_valid: np.ndarray      # (N,) int32
 
+    def __post_init__(self):
+        self._derived: Optional[Tuple[np.ndarray, ...]] = None
+        self._loads: Optional[np.ndarray] = None
+
     @property
     def t_max(self) -> int:
         return self.seg_tile.shape[1]
 
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    # ------------------------------------------------------------------ #
+    # Per-segment array views (cached; the batch simulator's input)
+    # ------------------------------------------------------------------ #
+    def seg_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(tile_of, start_of, len_of, group, priority) per-segment arrays.
+
+        ``group`` and ``priority`` are (n_seg, 1+S) int32; the rest (n_seg,)
+        int32. Computed once per plan.
+        """
+        if self._derived is None:
+            L = 1 + self.stragglers
+            n_seg = len(self.segments)
+            if n_seg:
+                tile_of = np.fromiter(
+                    (s.tile for s in self.segments), np.int32, n_seg)
+                start_of = np.fromiter(
+                    (s.row_start for s in self.segments), np.int32, n_seg)
+                len_of = np.fromiter(
+                    (s.row_len for s in self.segments), np.int32, n_seg)
+                group = np.asarray(
+                    [s.group for s in self.segments], np.int32).reshape(n_seg, L)
+                prio = np.asarray(
+                    [s.priority for s in self.segments], np.int32).reshape(n_seg, L)
+            else:
+                tile_of = start_of = len_of = np.zeros(0, np.int32)
+                group = prio = np.zeros((0, L), np.int32)
+            self._derived = (tile_of, start_of, len_of, group, prio)
+        return self._derived
+
     def loads(self) -> np.ndarray:
         """Per-machine assigned load in tile units (sum of row fractions)."""
-        out = np.zeros(self.n_machines)
-        for seg in self.segments:
-            for n in seg.group:
-                out[n] += seg.row_len / self.rows_per_tile
-        return out
+        if self._loads is None:
+            _, _, len_of, group, _ = self.seg_arrays()
+            out = np.zeros(self.n_machines)
+            if len(self.segments):
+                L = group.shape[1]
+                contrib = len_of.astype(np.float64) / self.rows_per_tile
+                np.add.at(out, group.ravel(), np.repeat(contrib, L))
+            self._loads = out
+        return self._loads.copy()
 
     def include_mask(self, stragglers: Sequence[int] = ()) -> np.ndarray:
         """(N, T_max) float32: 1.0 where this worker's copy of the segment is
@@ -86,31 +135,42 @@ class CompiledPlan:
         Raises if all ``1+S+`` holders of some segment straggled (more
         stragglers than the plan tolerates).
         """
-        bad = set(int(x) for x in stragglers)
-        mask = np.zeros(self.seg_tile.shape, dtype=np.float32)
-        winner: Dict[int, int] = {}
-        for sid, seg in enumerate(self.segments):
-            w = next((n for n in seg.priority if n not in bad), None)
-            if w is None:
-                raise RuntimeError(
-                    f"segment {sid} (tile {seg.tile}) lost all of {seg.priority}; "
-                    f"straggler set {sorted(bad)} exceeds tolerance S={self.stragglers}"
-                )
-            winner[sid] = w
-        for n in range(self.n_machines):
-            for t in range(self.t_max):
-                sid = int(self.seg_id[n, t])
-                if sid >= 0 and winner.get(sid) == n:
-                    mask[n, t] = 1.0
-        return mask
+        tile_of, _, _, _, prio = self.seg_arrays()
+        n_seg = len(self.segments)
+        bad = np.zeros(self.n_machines, dtype=bool)
+        # Ids outside [0, N) are ignored, matching the original set-based
+        # membership test (e.g. -1 pad sentinels leaking from id arrays).
+        sid_arr = np.asarray([int(x) for x in stragglers], dtype=np.int64)
+        bad[sid_arr[(sid_arr >= 0) & (sid_arr < self.n_machines)]] = True
+        if n_seg == 0:
+            return np.zeros(self.seg_tile.shape, dtype=np.float32)
+        ok = ~bad[prio]                      # (n_seg, L)
+        alive = ok.any(axis=1)
+        if not alive.all():
+            sid = int(np.argmin(alive))
+            seg = self.segments[sid]
+            raise RuntimeError(
+                f"segment {sid} (tile {seg.tile}) lost all of {seg.priority}; "
+                f"straggler set {sorted(np.flatnonzero(bad).tolist())} "
+                f"exceeds tolerance S={self.stragglers}"
+            )
+        winner = prio[np.arange(n_seg), ok.argmax(axis=1)]   # (n_seg,)
+        valid = self.seg_id >= 0
+        w = winner[np.clip(self.seg_id, 0, None)]
+        mask = (valid & (w == np.arange(self.n_machines)[:, None]))
+        return mask.astype(np.float32)
 
     def rows_of(self, machine: int) -> Set[int]:
         """Global row ids (tile * rows_per_tile + r) machine computes."""
+        tile_of, start_of, len_of, group, _ = self.seg_arrays()
+        if not len(self.segments):
+            return set()
+        member = (group == int(machine)).any(axis=1)
+        base = tile_of[member].astype(np.int64) * self.rows_per_tile \
+            + start_of[member]
         out: Set[int] = set()
-        for seg in self.segments:
-            if machine in seg.group:
-                base = seg.tile * self.rows_per_tile
-                out |= set(range(base + seg.row_start, base + seg.row_start + seg.row_len))
+        for b, ln in zip(base.tolist(), len_of[member].tolist()):
+            out.update(range(b, b + ln))
         return out
 
 
@@ -168,35 +228,60 @@ def compile_plan(
         long-running job keep one static shape across re-plans).
     """
     N = placement.n_machines
+    L = 1 + int(stragglers)
     avail = set(solution.machines)
     restricted = placement.restrict(sorted(avail))
     s = np.ones(N) if speeds is None else np.asarray(speeds, dtype=np.float64)
+    loads = solution.loads
+    with np.errstate(divide="ignore", invalid="ignore"):
+        finish_ratio = loads / s   # combine-priority key, fastest first
 
     segments: List[Segment] = []
-    per_worker: List[List[int]] = [[] for _ in range(N)]
+    group_rows: List[np.ndarray] = []
     for g, holders in enumerate(restricted.holders):
         hs = list(holders)
         mu_g = solution.mu[g, hs]
         ta: TileAssignment = fill_assignment(mu_g, hs, stragglers)
         sizes = integerize_fractions(ta.fractions, rows_per_tile, row_align)
-        start = 0
-        for f, (size, group) in enumerate(zip(sizes, ta.groups)):
-            if size == 0:
-                continue
-            # Priority: machine expected to finish first = lowest load/speed.
-            loads = solution.loads
-            prio = tuple(
-                sorted(group, key=lambda n: (loads[n] / s[n], n))
-            )
-            sid = len(segments)
-            segments.append(Segment(g, start, int(size), tuple(group), prio))
-            for n in group:
-                per_worker[n].append(sid)
-            start += int(size)
-        if start != rows_per_tile:
-            raise RuntimeError(f"tile {g}: assigned {start} != {rows_per_tile} rows")
+        keep = np.flatnonzero(sizes)
+        starts = np.concatenate(([0], np.cumsum(sizes)))[:-1]
+        if int(sizes.sum()) != rows_per_tile:  # pragma: no cover
+            raise RuntimeError(f"tile {g}: assigned {sizes.sum()} != {rows_per_tile} rows")
+        if keep.size == 0:
+            continue
+        gm = ta.group_matrix()[keep]                  # (F_keep, L), rows sorted asc
+        # Priority = sorted by (expected finish ratio, machine id): rows of gm
+        # are ascending machine ids, so a stable argsort on the ratio alone
+        # breaks ties by id exactly like the scalar sorted(key=(ratio, n)).
+        order = np.argsort(finish_ratio[gm], axis=1, kind="stable")
+        prio = np.take_along_axis(gm, order, axis=1)
+        for i, f in enumerate(keep.tolist()):
+            segments.append(Segment(
+                g, int(starts[f]), int(sizes[f]),
+                tuple(gm[i].tolist()), tuple(prio[i].tolist()),
+            ))
+        group_rows.append(gm)
 
-    cap = max((len(x) for x in per_worker), default=0)
+    n_seg = len(segments)
+    # ---------------------------------------------------------------- #
+    # Vectorized packing: worker n's slots are its segments in sid order
+    # (a stable sort of the flattened membership list by worker).
+    # ---------------------------------------------------------------- #
+    if n_seg:
+        group_all = np.concatenate(group_rows, axis=0)     # (n_seg, L)
+        flat_w = group_all.ravel().astype(np.int64)
+        flat_sid = np.repeat(np.arange(n_seg, dtype=np.int64), L)
+        order = np.argsort(flat_w, kind="stable")
+        w_sorted = flat_w[order]
+        sid_sorted = flat_sid[order]
+        counts = np.bincount(flat_w, minlength=N)
+        offsets = np.concatenate(([0], np.cumsum(counts)))[:-1]
+        t_idx = np.arange(flat_w.size) - np.repeat(offsets, counts)
+    else:
+        w_sorted = sid_sorted = t_idx = np.zeros(0, np.int64)
+        counts = np.zeros(N, np.int64)
+
+    cap = int(counts.max()) if n_seg else 0
     if t_max is not None:
         if t_max < cap:
             raise ValueError(f"t_max={t_max} < required capacity {cap}")
@@ -207,17 +292,16 @@ def compile_plan(
     seg_start = np.zeros((N, cap), dtype=np.int32)
     seg_len = np.zeros((N, cap), dtype=np.int32)
     seg_id = np.full((N, cap), -1, dtype=np.int32)
-    n_valid = np.zeros(N, dtype=np.int32)
-    for n in range(N):
-        for t, sid in enumerate(per_worker[n]):
-            seg = segments[sid]
-            seg_tile[n, t] = seg.tile
-            seg_start[n, t] = seg.row_start
-            seg_len[n, t] = seg.row_len
-            seg_id[n, t] = sid
-        n_valid[n] = len(per_worker[n])
+    if n_seg:
+        tile_of = np.fromiter((s_.tile for s_ in segments), np.int32, n_seg)
+        start_of = np.fromiter((s_.row_start for s_ in segments), np.int32, n_seg)
+        len_of = np.fromiter((s_.row_len for s_ in segments), np.int32, n_seg)
+        seg_tile[w_sorted, t_idx] = tile_of[sid_sorted]
+        seg_start[w_sorted, t_idx] = start_of[sid_sorted]
+        seg_len[w_sorted, t_idx] = len_of[sid_sorted]
+        seg_id[w_sorted, t_idx] = sid_sorted.astype(np.int32)
 
-    return CompiledPlan(
+    plan = CompiledPlan(
         n_machines=N,
         rows_per_tile=rows_per_tile,
         stragglers=stragglers,
@@ -226,25 +310,32 @@ def compile_plan(
         seg_start=seg_start,
         seg_len=seg_len,
         seg_id=seg_id,
-        n_valid=n_valid,
+        n_valid=counts.astype(np.int32),
     )
+    if n_seg:
+        prio_all = np.asarray(
+            [s_.priority for s_ in segments], np.int32).reshape(n_seg, L)
+        plan._derived = (tile_of, start_of, len_of,
+                         group_all.astype(np.int32), prio_all)
+    return plan
 
 
 def verify_plan_coverage(plan: CompiledPlan, n_tiles: int,
                          straggler_sets: Sequence[Sequence[int]] = ((),)) -> None:
     """Assert every global row is combined exactly once under each straggler
     set (and that redundancy is exactly 1+S). Raises AssertionError."""
+    total = n_tiles * plan.rows_per_tile
     for bad in straggler_sets:
-        mask = plan.include_mask(bad)
-        counts = np.zeros(n_tiles * plan.rows_per_tile, dtype=np.int64)
-        for n in range(plan.n_machines):
-            for t in range(plan.t_max):
-                if mask[n, t] > 0:
-                    g = int(plan.seg_tile[n, t])
-                    st = int(plan.seg_start[n, t])
-                    ln = int(plan.seg_len[n, t])
-                    base = g * plan.rows_per_tile
-                    counts[base + st: base + st + ln] += 1
+        mask = plan.include_mask(bad) > 0
+        g = plan.seg_tile[mask].astype(np.int64)
+        st = plan.seg_start[mask].astype(np.int64)
+        ln = plan.seg_len[mask].astype(np.int64)
+        base = g * plan.rows_per_tile + st
+        # Difference-array scatter + prefix sum = per-row coverage counts.
+        diff = np.zeros(total + 1, dtype=np.int64)
+        np.add.at(diff, base, 1)
+        np.add.at(diff, base + ln, -1)
+        counts = np.cumsum(diff[:-1])
         if not np.all(counts == 1):
             missing = int(np.sum(counts == 0))
             dup = int(np.sum(counts > 1))
@@ -252,6 +343,18 @@ def verify_plan_coverage(plan: CompiledPlan, n_tiles: int,
                 f"coverage broken under stragglers={list(bad)}: "
                 f"{missing} rows missing, {dup} rows duplicated"
             )
-    for seg in plan.segments:
-        if len(set(seg.group)) != 1 + plan.stragglers:
-            raise AssertionError(f"segment group {seg.group} != 1+S machines")
+    L = 1 + plan.stragglers
+    _, _, _, group, _ = plan.seg_arrays()
+    if len(plan.segments):
+        if group.shape[1] != L:
+            raise AssertionError(
+                f"segment groups are {group.shape[1]} wide, != 1+S = {L}")
+        srt = np.sort(group, axis=1)
+        distinct = (
+            np.ones(len(plan.segments), bool) if L == 1
+            else (srt[:, 1:] != srt[:, :-1]).all(axis=1)
+        )
+        if not distinct.all():
+            sid = int(np.argmin(distinct))
+            raise AssertionError(
+                f"segment group {plan.segments[sid].group} != 1+S machines")

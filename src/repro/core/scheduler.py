@@ -72,14 +72,17 @@ class USECScheduler:
         self.waste_epsilon = float(waste_epsilon)
         self._prev: Optional[StepPlan] = None
         self._step = 0
-        # Static per-worker capacity: bound segments/worker so plans keep one
-        # shape across the whole run. Worst case per tile a worker holds, the
-        # filling algorithm emits <= N_g segments, each touching <= 1+S
-        # workers; a safe, tight-enough bound is (tiles stored) * (1+S).
-        if t_max is None:
-            z = placement.storage_sets()
-            t_max = max(len(zn) for zn in z) * (1 + self.stragglers + 1)
-        self.t_max = t_max
+        self._t_max_explicit = t_max is not None
+        self.t_max = self._derive_t_max() if t_max is None else t_max
+
+    def _derive_t_max(self) -> int:
+        """Static per-worker capacity: bound segments/worker so plans keep
+        one shape across the whole run. Per tile a worker holds, the filling
+        algorithm emits <= N_g segments of which the worker joins a few; a
+        safe, tight-enough bound is (tiles stored) * (2+S) — the extra slot
+        absorbs integerization splits at tile boundaries."""
+        z = self.placement.storage_sets()
+        return max(len(zn) for zn in z) * (1 + self.stragglers + 1)
 
     def plan_step(
         self,
@@ -149,3 +152,81 @@ class USECScheduler:
     def report(self, loads: Dict[int, float], durations: Dict[int, float]) -> None:
         """Lines 14–15: ingest worker speed measurements for the next step."""
         self.estimator.update(self.estimator.measure(loads, durations))
+
+    def select_straggler_tolerance(
+        self,
+        available: Sequence[int],
+        candidates: Sequence[int] = (0, 1, 2),
+        n_draws: int = 256,
+        expected_stragglers: int = 1,
+        straggle_mode: str = "uniform",
+        jitter_sigma: float = 0.3,
+        quantile: float = 0.95,
+        seed: int = 0,
+        commit: bool = False,
+    ) -> Tuple[int, Dict[int, float]]:
+        """Batched lookahead: pick S from simulated completion distributions.
+
+        For each candidate S, plans under the current speed estimates and
+        scores the plan on ``n_draws`` simulated scenarios — realized speeds
+        jittered lognormally around the estimates, plus
+        ``expected_stragglers`` drawn per scenario by ``straggle_mode``
+        (the environment model). The score is the ``quantile`` of the
+        completion-time distribution, with infeasible draws (a plan that
+        cannot survive the drawn straggler set) counting as +inf — so a
+        tolerance below the expected straggler rate is never selected.
+
+        Returns ``(best_S, {S: score})``; candidates the placement cannot
+        support (replication < 1+S) are omitted from the scores. With
+        ``commit=True`` the chosen S becomes this scheduler's tolerance for
+        subsequent :meth:`plan_step` calls (re-deriving the static t_max
+        capacity bound).
+        """
+        from repro.runtime.scenarios import draw_scenarios
+        from repro.runtime.simulate import simulate_batch
+
+        avail_t = tuple(sorted(int(a) for a in available))
+        restricted = self.placement.restrict(avail_t)
+        s_hat = self.estimator.speeds
+        rng = np.random.default_rng(seed)
+        # ONE shared scenario batch for every candidate (common random
+        # numbers): candidates are compared on identical draws, so scores
+        # differ only by plan quality, never by draw-set noise, and a
+        # candidate's score does not depend on which others are scored.
+        realized, drop = draw_scenarios(
+            s_hat, n_draws, jitter_sigma, rng, avail_t,
+            n_stragglers=expected_stragglers,
+            straggler_mode=straggle_mode)
+        scores: Dict[int, float] = {}
+        for S in candidates:
+            if restricted.replication < 1 + int(S):
+                continue
+            solution = solve_assignment(
+                self.placement, s_hat, available=avail_t,
+                stragglers=int(S), lexicographic=False,
+            )
+            plan = compile_plan(
+                self.placement, solution,
+                rows_per_tile=self.rows_per_tile, stragglers=int(S),
+                speeds=s_hat, row_align=self.row_align,
+            )
+            timing = simulate_batch(plan, realized, dropped=drop,
+                                    on_infeasible="inf")
+            # Order statistic, not interpolation: +inf draws must surface
+            # as +inf scores (interpolating between infs yields NaN).
+            scores[int(S)] = float(np.quantile(
+                timing.completion_times, quantile, method="lower"))
+        if not scores:
+            raise ValueError(
+                f"no feasible straggler tolerance among {tuple(candidates)} "
+                f"for availability {avail_t}"
+            )
+        best = min(scores, key=lambda s: (scores[s], s))
+        if commit and best != self.stragglers:
+            self.stragglers = best
+            if not self._t_max_explicit:
+                # A user-pinned t_max stays (one static shape for the whole
+                # run is exactly what an explicit cap is for).
+                self.t_max = self._derive_t_max()
+            self._prev = None  # old plan has a different tolerance
+        return best, scores

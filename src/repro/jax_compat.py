@@ -1,0 +1,74 @@
+"""Version compatibility for the jax APIs this repo uses.
+
+The codebase targets the modern surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.make_mesh(..., axis_types=...)``); older 0.4.x releases (as pinned in
+CI and shipped in the dev container) spell these differently:
+
+  =====================  =============================================
+  modern                 jax 0.4.x
+  =====================  =============================================
+  jax.shard_map          jax.experimental.shard_map.shard_map
+  check_vma=...          check_rep=...
+  jax.set_mesh(mesh)     ``with mesh:`` (Mesh is a context manager)
+  make_mesh axis_types   implicit (all axes behave as Auto)
+  =====================  =============================================
+
+Import the helpers here instead of reaching for ``jax.*`` directly whenever
+one of these APIs is involved; everything else stays plain jax.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and \
+            "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager that makes ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # 0.4.x: ``with mesh:`` enters the mesh context
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """Dispatch to ``jax.shard_map`` or the 0.4.x experimental spelling."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        params = inspect.signature(jax.shard_map).parameters
+        if axis_names is not None and "axis_names" in params:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            if "check_vma" in params:
+                kwargs["check_vma"] = check_vma
+            elif "check_rep" in params:  # brief transition releases
+                kwargs["check_rep"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kwargs = {}
+    if check_vma is not None:
+        kwargs["check_rep"] = bool(check_vma)
+    if axis_names is not None:
+        # Modern axis_names semantics: listed axes are manual, the rest stay
+        # auto. The 0.4.x spelling is the complement, via ``auto=``.
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto and "auto" in inspect.signature(_sm).parameters:
+            kwargs["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

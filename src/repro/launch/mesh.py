@@ -10,15 +10,15 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.jax_compat import make_mesh as make_mesh_auto
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data x model single pod; (2, 16, 16) pod x data x model for
     the 512-chip two-pod dry-run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_auto(shape, axes)
 
 
 def make_worker_mesh(n_workers: int, n_model: int = 1, devices=None):
@@ -28,11 +28,6 @@ def make_worker_mesh(n_workers: int, n_model: int = 1, devices=None):
     if len(devices) < need:
         raise ValueError(f"need {need} devices, have {len(devices)}")
     if n_model == 1:
-        return jax.make_mesh(
-            (n_workers,), ("data",), devices=devices[:need],
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
-    return jax.make_mesh(
-        (n_workers, n_model), ("data", "model"), devices=devices[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return make_mesh_auto((n_workers,), ("data",), devices=devices[:need])
+    return make_mesh_auto(
+        (n_workers, n_model), ("data", "model"), devices=devices[:need])

@@ -54,6 +54,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     import jax
+
     import jax.numpy as jnp
 
     from repro.configs import get_config
@@ -102,8 +103,10 @@ def main(argv=None):
     straggle = StragglerProcess(count=args.drop_stragglers, mode="uniform",
                                 seed=args.seed)
 
+    from repro.jax_compat import set_mesh as jc_set_mesh
+
     params = bundle.init(jax.random.PRNGKey(args.seed))
-    with jax.set_mesh(mesh):
+    with jc_set_mesh(mesh):
         pshard = shr.param_shardings(
             jax.eval_shape(bundle.init, jax.random.PRNGKey(args.seed)), cfg, mesh
         )

@@ -94,11 +94,17 @@ def _moe_chunk(p: Dict, xt: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]
     # act_shard_axis is set). At prefill the pins replicate (C, D) per chunk
     # and regress memory 6 -> 25 GiB (measured on llama4; §Perf).
     ep_axis = getattr(cfg, "act_shard_axis", "")
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or ep_axis not in getattr(mesh, "axis_names", ()):
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except AttributeError:  # jax < 0.5 exposes only the internal accessor
+        from jax._src.mesh import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
+    axis_names = tuple(getattr(mesh, "axis_names", None) or ())
+    if mesh is None or ep_axis not in axis_names:
         ep_axis = ""  # no such axis in scope (single-device tests etc.)
     bax = tuple(getattr(cfg, "act_batch_axes", ()) or ())
-    bax = tuple(a for a in bax if a in getattr(mesh, "axis_names", ())) or None
+    bax = tuple(a for a in bax if a in axis_names) or None
 
     def pin_e(a):
         if not ep_axis:

@@ -1,30 +1,85 @@
 """Distributed execution substrate: USEC executors, wall-clock simulation,
-checkpointing, gradient compression."""
+batched scenario engine, checkpointing, gradient compression.
 
-from .checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
-from .executor import BlockPlan, StagedMatrix, block_plan, make_matvec_executor, stage_matrix
+The simulation/scenario layer is pure NumPy and imports eagerly; the
+executor/checkpoint layer needs jax and resolves lazily (PEP 562), so
+`pip install usec-repro` without the ``[jax]`` extra can still run the
+planners, the batched simulator and the sweep driver.
+"""
+
+from .scenarios import (
+    ChurnStep,
+    ChurnSweepResult,
+    ScenarioResult,
+    SweepConfig,
+    draw_scenarios,
+    summarize,
+    sweep_cell,
+    sweep_churn,
+    sweep_grid,
+)
 from .simulate import (
+    BatchTiming,
+    PlanStack,
     SpeedProcess,
     StepTiming,
     StragglerProcess,
+    build_plan_stack,
     exponential_speeds,
+    simulate_batch,
     simulate_step,
     worker_times,
 )
 
+_JAX_EXPORTS = {
+    "BlockPlan": "executor",
+    "StagedMatrix": "executor",
+    "block_plan": "executor",
+    "make_matvec_executor": "executor",
+    "stage_matrix": "executor",
+    "latest_checkpoint": "checkpoint",
+    "restore_checkpoint": "checkpoint",
+    "save_checkpoint": "checkpoint",
+}
+
+
+def __getattr__(name):
+    if name in _JAX_EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(f".{_JAX_EXPORTS[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value  # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "BatchTiming",
     "BlockPlan",
+    "ChurnStep",
+    "ChurnSweepResult",
+    "PlanStack",
+    "ScenarioResult",
     "SpeedProcess",
     "StagedMatrix",
     "StepTiming",
     "StragglerProcess",
+    "SweepConfig",
     "block_plan",
+    "build_plan_stack",
+    "draw_scenarios",
     "exponential_speeds",
     "latest_checkpoint",
     "make_matvec_executor",
     "restore_checkpoint",
     "save_checkpoint",
+    "simulate_batch",
     "simulate_step",
     "stage_matrix",
+    "summarize",
+    "sweep_cell",
+    "sweep_churn",
+    "sweep_grid",
     "worker_times",
 ]

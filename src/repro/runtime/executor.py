@@ -24,6 +24,8 @@ from dataclasses import dataclass
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
+
+from repro.jax_compat import shard_map
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
@@ -210,7 +212,7 @@ def make_matvec_executor(
         y = jax.lax.psum(y, worker_axis)
         return y if w.ndim == 2 else y[:, 0]
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         body,
         mesh=mesh,
         in_specs=(

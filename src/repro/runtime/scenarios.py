@@ -1,0 +1,317 @@
+"""Batched scenario sweeps: placements × straggler policies × churn traces.
+
+This is the evaluation driver the ROADMAP's "as many scenarios as you can
+imagine" goal asks for. It stays entirely on the vectorized path:
+
+- a *static* sweep plans once per (placement, tolerance) cell and evaluates
+  thousands of (realized-speed, straggler-set) draws with one
+  :func:`repro.runtime.simulate.simulate_batch` call per cell;
+- a *churn* sweep walks an availability trace, re-plans per membership state
+  (memoized — revisited states reuse their compiled plan), stacks the plans,
+  and evaluates all (step, draw) pairs in one batched call, alongside
+  per-transition waste accounting.
+
+Everything returns plain arrays/dataclasses so benchmarks and schedulers can
+consume distributions directly (the scheduler's straggler-tolerance lookahead
+is exactly a small static sweep over S candidates).
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.elastic import transition_waste
+from repro.core.placement import Placement
+from repro.core.assignment import solve_assignment
+from repro.core.plan import CompiledPlan, compile_plan
+
+from .simulate import (
+    PlanStack,
+    StragglerProcess,
+    build_plan_stack,
+    simulate_batch,
+)
+
+
+# ---------------------------------------------------------------------- #
+# Config / result containers
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class SweepConfig:
+    """Knobs shared by every cell of a sweep.
+
+    n_draws: scenario draws per cell.
+    rows_per_tile: plan integerization granularity.
+    speed_mean: mean of the exponential base-speed draw (Fig. 2 model).
+    jitter_sigma: lognormal jitter applied to the *realized* speeds around
+      the speeds the planner saw (0 = planner is clairvoyant).
+    plan_speeds: optional (N,) speeds the planner uses; default = the base
+      draw's mean vector (heterogeneous planning needs explicit speeds).
+    seed: base RNG seed; each cell derives an independent stream.
+    """
+
+    n_draws: int = 1000
+    rows_per_tile: int = 96
+    speed_mean: float = 1.0
+    jitter_sigma: float = 0.3
+    plan_speeds: Optional[np.ndarray] = None
+    seed: int = 0
+
+
+def summarize(times: np.ndarray) -> Dict[str, float]:
+    """Distribution summary of completion times; inf-aware."""
+    t = np.asarray(times, dtype=np.float64)
+    finite = t[np.isfinite(t)]
+    out = {
+        "n": int(t.size),
+        "feasible_frac": float(finite.size / t.size) if t.size else 0.0,
+    }
+    if finite.size:
+        out.update(
+            mean=float(finite.mean()),
+            std=float(finite.std()),
+            p50=float(np.percentile(finite, 50)),
+            p95=float(np.percentile(finite, 95)),
+            p99=float(np.percentile(finite, 99)),
+            max=float(finite.max()),
+        )
+    else:
+        out.update(mean=float("inf"), std=0.0, p50=float("inf"),
+                   p95=float("inf"), p99=float("inf"), max=float("inf"))
+    return out
+
+
+@dataclass
+class ScenarioResult:
+    """One sweep cell: a named scenario and its completion-time distribution."""
+
+    name: str
+    placement: str
+    tolerance: int
+    straggler_mode: str
+    n_stragglers: int
+    completion_times: np.ndarray     # (B,), +inf on infeasible draws
+    n_straggled: np.ndarray          # (B,)
+    c_star: float                    # planner's optimum under plan speeds
+    summary: Dict[str, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.summary:
+            self.summary = summarize(self.completion_times)
+
+
+@dataclass
+class ChurnStep:
+    """One step of a churn sweep."""
+
+    step: int
+    available: Tuple[int, ...]
+    c_star: float
+    replanned: bool
+    waste: int
+    summary: Dict[str, float]
+
+
+@dataclass
+class ChurnSweepResult:
+    steps: List[ChurnStep]
+    completion_times: np.ndarray     # (steps, draws)
+    total_waste: int
+
+    def per_step_mean(self) -> np.ndarray:
+        t = self.completion_times.copy()
+        t[~np.isfinite(t)] = np.nan
+        return np.nanmean(t, axis=1)
+
+
+# ---------------------------------------------------------------------- #
+# Static sweep: placements × (tolerance, straggler policy)
+# ---------------------------------------------------------------------- #
+def draw_scenarios(
+    plan_speeds: np.ndarray,
+    n_draws: int,
+    jitter_sigma: float,
+    rng: np.random.Generator,
+    available: Sequence[int],
+    n_stragglers: int = 0,
+    straggler_mode: str = "none",
+    floor: float = 1e-6,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw a (realized-speeds, straggler-mask) scenario batch.
+
+    The single environment model shared by sweep cells and the scheduler's
+    tolerance lookahead: realized speeds are the planner's speeds with
+    lognormal jitter (floored), straggler sets come from
+    :class:`StragglerProcess` semantics. Returns ((B, N) speeds, (B, N) bool).
+    """
+    s = np.asarray(plan_speeds, dtype=np.float64)
+    N = s.shape[0]
+    jitter = (
+        np.exp(rng.normal(0.0, jitter_sigma, (n_draws, N)))
+        if jitter_sigma > 0 else np.ones((n_draws, N))
+    )
+    realized = np.maximum(s[None, :] * jitter, floor)
+    proc = StragglerProcess(count=n_stragglers, mode=straggler_mode,
+                            seed=int(rng.integers(2 ** 31)))
+    drop = proc.sample_batch(available, realized, N)
+    return realized, drop
+
+
+def sweep_cell(
+    name: str,
+    placement: Placement,
+    tolerance: int,
+    straggler_mode: str,
+    n_stragglers: int,
+    cfg: SweepConfig,
+    rng: Optional[np.random.Generator] = None,
+) -> ScenarioResult:
+    """Plan one (placement, S) cell and evaluate ``cfg.n_draws`` scenarios."""
+    rng = rng or np.random.default_rng(cfg.seed)
+    N = placement.n_machines
+    if cfg.plan_speeds is not None:
+        s_plan = np.asarray(cfg.plan_speeds, dtype=np.float64)
+    else:
+        s_plan = np.maximum(rng.exponential(cfg.speed_mean, N), 1e-3)
+    sol = solve_assignment(placement, s_plan, stragglers=tolerance,
+                           lexicographic=False)
+    plan = compile_plan(placement, sol, rows_per_tile=cfg.rows_per_tile,
+                        stragglers=tolerance, speeds=s_plan)
+    avail = [n for n in range(N) if plan.n_valid[n] > 0]
+    realized, drop = draw_scenarios(
+        s_plan, cfg.n_draws, cfg.jitter_sigma, rng, avail,
+        n_stragglers=n_stragglers, straggler_mode=straggler_mode)
+    timing = simulate_batch(plan, realized, dropped=drop,
+                            on_infeasible="inf")
+    return ScenarioResult(
+        name=name,
+        placement=placement.name,
+        tolerance=tolerance,
+        straggler_mode=straggler_mode,
+        n_stragglers=n_stragglers,
+        completion_times=timing.completion_times,
+        n_straggled=timing.n_straggled,
+        c_star=sol.c_star,
+    )
+
+
+def sweep_grid(
+    placements: Mapping[str, Placement],
+    tolerances: Sequence[int] = (0, 1),
+    straggler_policies: Sequence[Tuple[str, int]] = (("none", 0),),
+    cfg: SweepConfig = SweepConfig(),
+) -> List[ScenarioResult]:
+    """Cross placements × tolerances × straggler policies.
+
+    ``straggler_policies`` are (mode, count) pairs, e.g. ("uniform", 1) or
+    ("slowest", 2). Cells whose placement cannot tolerate S stragglers
+    (replication < 1+S) are skipped. Each cell's RNG stream is derived from
+    (cfg.seed, cell name) alone, so a cell's distribution is reproducible
+    regardless of which other cells are in the grid.
+    """
+    out: List[ScenarioResult] = []
+    for pname, placement in sorted(placements.items()):
+        for S in tolerances:
+            if placement.replication < 1 + S:
+                continue
+            for mode, count in straggler_policies:
+                name = f"{pname}/S={S}/{mode}x{count}"
+                rng = np.random.default_rng(np.random.SeedSequence(
+                    [cfg.seed, zlib.crc32(name.encode("utf-8"))]))
+                out.append(sweep_cell(
+                    name, placement, S, mode, count, cfg, rng))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Churn sweep: availability traces with per-state plan memoization
+# ---------------------------------------------------------------------- #
+def sweep_churn(
+    placement: Placement,
+    events,
+    cfg: SweepConfig = SweepConfig(),
+    tolerance: int = 0,
+    n_steps: Optional[int] = None,
+) -> ChurnSweepResult:
+    """Walk an availability trace and batch-evaluate every step.
+
+    Args:
+      placement: the storage placement (fixed across the run, as in USEC).
+      events: iterable of :class:`repro.core.elastic.ElasticEvent` (e.g. a
+        :class:`MarkovChurnTrace` stepped externally, or
+        :func:`scripted_trace`). Consumed up to ``n_steps`` items.
+      cfg: sweep knobs (draws per step, jitter, planner speeds).
+      tolerance: straggler tolerance S of every plan.
+      n_steps: cap when ``events`` is an infinite generator.
+
+    Plans are memoized per availability set — elastic traces revisit states,
+    and the planner is deterministic given (availability, plan speeds). All
+    (step, draw) scenarios are evaluated by ONE `simulate_batch` call on the
+    stacked plans.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    N = placement.n_machines
+    s_plan = (
+        np.asarray(cfg.plan_speeds, dtype=np.float64)
+        if cfg.plan_speeds is not None
+        else np.maximum(rng.exponential(cfg.speed_mean, N), 1e-3)
+    )
+
+    # Memoized per availability state: (stack index, plan, c*, rows dict).
+    # Elastic traces revisit states; the rows dict is cached too so waste
+    # accounting on revisits costs O(1), not O(N * rows).
+    plan_cache: Dict[Tuple[int, ...], Tuple[int, CompiledPlan, float, Dict[int, set]]] = {}
+    plans: List[CompiledPlan] = []
+    steps_meta = []
+    prev_rows: Optional[Dict[int, set]] = None
+    prev_avail: Optional[Tuple[int, ...]] = None
+    total_waste = 0
+
+    for i, ev in enumerate(events):
+        if n_steps is not None and i >= n_steps:
+            break
+        avail = tuple(sorted(ev.available))
+        if avail not in plan_cache:
+            sol = solve_assignment(placement, s_plan, available=avail,
+                                   stragglers=tolerance, lexicographic=False)
+            plan = compile_plan(placement, sol,
+                                rows_per_tile=cfg.rows_per_tile,
+                                stragglers=tolerance, speeds=s_plan)
+            rows = {n: plan.rows_of(n) for n in range(N)}
+            plan_cache[avail] = (len(plans), plan, sol.c_star, rows)
+            plans.append(plan)
+        idx, plan, c_star, rows = plan_cache[avail]
+        replanned = avail != prev_avail
+        waste = 0
+        if replanned and prev_rows is not None:
+            preempted = [n for n in range(N) if n not in set(avail)]
+            waste = transition_waste(prev_rows, rows, preempted)
+            total_waste += waste
+        prev_rows = rows
+        steps_meta.append((i, avail, idx, c_star, replanned, waste))
+        prev_avail = avail
+
+    if not steps_meta:
+        return ChurnSweepResult([], np.zeros((0, cfg.n_draws)), 0)
+
+    stack = build_plan_stack(plans)
+    T, B = len(steps_meta), cfg.n_draws
+    plan_index = np.repeat(
+        np.asarray([m[2] for m in steps_meta], dtype=np.int64), B)
+    realized, _ = draw_scenarios(
+        s_plan, T * B, cfg.jitter_sigma, rng, range(N))
+    timing = simulate_batch(stack, realized, plan_index=plan_index,
+                            on_infeasible="inf")
+    completion = timing.completion_times.reshape(T, B)
+
+    steps = [
+        ChurnStep(step=i, available=avail, c_star=c_star,
+                  replanned=replanned, waste=waste,
+                  summary=summarize(completion[row]))
+        for row, (i, avail, _, c_star, replanned, waste) in enumerate(steps_meta)
+    ]
+    return ChurnSweepResult(steps, completion, total_waste)

@@ -1,0 +1,100 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``strategies``
+are re-exported unchanged. When it is not (this container ships without it),
+a minimal fallback runs each property on a fixed, deterministically seeded
+subset of examples so the tier-1 suite still collects and exercises the same
+code paths. The fallback supports exactly the strategy surface the suite
+uses: ``integers``, ``sampled_from``, ``floats`` and ``booleans`` — extend it
+here if a test needs more.
+
+Usage in tests (drop-in for the hypothesis import):
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    #: cap on fallback examples per property (hypothesis itself runs more;
+    #: the fallback trades coverage for suite latency, deterministically).
+    FALLBACK_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self._sampler = sampler
+
+        def sample(self, rng):
+            return self._sampler(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=20, **_ignored):
+        """Record the requested example count; works above or below @given."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                requested = getattr(
+                    wrapper, "_max_examples", getattr(fn, "_max_examples", 20)
+                )
+                n = min(int(requested), FALLBACK_MAX_EXAMPLES)
+                # Fixed per-test seed: stable across runs and machines.
+                seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"falsifying example {i + 1}/{n} for "
+                            f"{fn.__qualname__}: {drawn!r}"
+                        ) from exc
+
+            # Hide the property's parameters from pytest's fixture resolver:
+            # the strategies supply them, not fixtures.
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -1,0 +1,363 @@
+"""Batched scenario engine: differential tests against the scalar oracle and
+the pre-vectorization reference implementations.
+
+Two families of guarantees:
+
+1. *Bitwise identity* of the vectorized planning hot paths
+   (``fill_assignment``, ``compile_plan``, ``loads``, ``include_mask``)
+   against :mod:`repro.core.reference` — same floats, same bits.
+2. *Exact agreement* of ``simulate_batch`` with scalar ``simulate_step``
+   completion times on randomized (plan, speeds, dropped) scenarios —
+   the acceptance bar is >= 100 scenarios, these tests cover more.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    MarkovChurnTrace,
+    USECScheduler,
+    compile_plan,
+    cyclic_placement,
+    fill_assignment,
+    man_placement,
+    repetition_placement,
+    solve_assignment,
+)
+from repro.core.reference import (
+    compile_plan_reference,
+    fill_assignment_reference,
+    include_mask_reference,
+    loads_reference,
+)
+from repro.runtime.scenarios import (
+    SweepConfig,
+    summarize,
+    sweep_churn,
+    sweep_grid,
+)
+from repro.runtime.simulate import (
+    StragglerProcess,
+    build_plan_stack,
+    simulate_batch,
+    simulate_step,
+)
+
+
+def _random_plan(rng, S=None):
+    """A random feasible (placement, solution, plan, speeds) instance."""
+    n = int(rng.integers(4, 9))
+    j = int(rng.integers(2, min(4, n) + 1))
+    if S is None:
+        S = int(rng.integers(0, j))
+    kind = rng.choice(["cyclic", "man"])
+    p = cyclic_placement(n, n, j) if kind == "cyclic" else man_placement(n, j)
+    speeds = rng.exponential(1.0, n) + 0.05
+    sol = solve_assignment(p, speeds, stragglers=S)
+    plan = compile_plan(p, sol, rows_per_tile=int(rng.integers(16, 200)),
+                        stragglers=S, speeds=speeds,
+                        row_align=int(rng.choice([1, 8])))
+    return p, sol, plan, speeds, S
+
+
+def _feasible_drop(rng, plan, S, n):
+    """A random straggler set the plan survives (possibly empty)."""
+    k = int(rng.integers(0, S + 1))
+    if k == 0:
+        return ()
+    cand = [w for w in range(n) if plan.n_valid[w] > 0]
+    for _ in range(30):
+        sub = tuple(int(x) for x in rng.choice(cand, size=k, replace=False))
+        try:
+            simulate_step(plan, np.ones(n), dropped=sub)
+            return sub
+        except RuntimeError:
+            continue
+    return ()
+
+
+# ---------------------------------------------------------------------- #
+# 1. Bitwise identity of the vectorized planning paths
+# ---------------------------------------------------------------------- #
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=40, deadline=None)
+def test_fill_assignment_bitwise_identical_to_reference(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 12))
+    S = int(rng.integers(0, min(3, n - 1) + 1))
+    L = 1 + S
+    for _ in range(100):
+        mu = rng.dirichlet(np.ones(n)) * L
+        if mu.max() <= 1.0:
+            break
+    else:
+        mu = np.full(n, L / n)
+    machines = [int(x) for x in rng.permutation(100)[:n]]  # arbitrary ids
+    a = fill_assignment(mu, machines, stragglers=S)
+    b = fill_assignment_reference(mu, machines, stragglers=S)
+    assert a.groups == b.groups
+    assert a.fractions.tobytes() == b.fractions.tobytes()
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_compile_plan_bitwise_identical_to_reference(seed):
+    rng = np.random.default_rng(seed)
+    p, sol, plan, speeds, S = _random_plan(rng)
+    ref = compile_plan_reference(p, sol, rows_per_tile=plan.rows_per_tile,
+                                 stragglers=S, speeds=speeds)
+    live = compile_plan(p, sol, rows_per_tile=plan.rows_per_tile,
+                        stragglers=S, speeds=speeds)
+    assert live.segments == ref.segments
+    for name in ("seg_tile", "seg_start", "seg_len", "seg_id", "n_valid"):
+        assert getattr(live, name).tobytes() == getattr(ref, name).tobytes(), name
+    assert live.loads().tobytes() == loads_reference(ref).tobytes()
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_include_mask_bitwise_identical_to_reference(seed):
+    rng = np.random.default_rng(seed)
+    _, _, plan, _, S = _random_plan(rng)
+    n = plan.n_machines
+    drop = _feasible_drop(rng, plan, S, n)
+    assert plan.include_mask(drop).tobytes() == \
+        include_mask_reference(plan, drop).tobytes()
+
+
+# ---------------------------------------------------------------------- #
+# 2. simulate_batch == simulate_step, exactly
+# ---------------------------------------------------------------------- #
+def test_simulate_batch_matches_scalar_on_150_scenarios():
+    """Acceptance: exact completion-time agreement on >= 100 random
+    (plan, speeds, dropped) scenarios. Runs 15 plans x 10 draws = 150."""
+    rng = np.random.default_rng(7)
+    checked = 0
+    for _ in range(15):
+        p, sol, plan, _, S = _random_plan(rng)
+        n = p.n_machines
+        B = 10
+        speeds = rng.exponential(1.0, (B, n)) + 0.05
+        drops = [_feasible_drop(rng, plan, S, n) for _ in range(B)]
+        bt = simulate_batch(plan, speeds, dropped=drops)
+        for b in range(B):
+            ref = simulate_step(plan, speeds[b], dropped=drops[b])
+            assert bt.completion_times[b] == ref.completion_time
+            assert np.array_equal(bt.finish_times[b], ref.finish_times)
+            assert bt.n_straggled[b] == len(ref.straggled)
+            assert bt.feasible[b]
+            checked += 1
+    assert checked >= 100
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_simulate_batch_scalar_parity_property(seed):
+    rng = np.random.default_rng(seed)
+    _, _, plan, _, S = _random_plan(rng)
+    n = plan.n_machines
+    speeds = rng.exponential(1.0, (5, n)) + 0.05
+    drops = [_feasible_drop(rng, plan, S, n) for _ in range(5)]
+    bt = simulate_batch(plan, speeds, dropped=drops)
+    for b in range(5):
+        ref = simulate_step(plan, speeds[b], dropped=drops[b])
+        assert bt.completion_times[b] == ref.completion_time
+
+
+def test_simulate_batch_stack_mixed_tolerances():
+    """One batched call across plans with different S and segment counts."""
+    rng = np.random.default_rng(11)
+    p = cyclic_placement(6, 6, 3)
+    speeds0 = rng.exponential(1.0, 6) + 0.05
+    plans = []
+    for S in (0, 1, 2):
+        sol = solve_assignment(p, speeds0, stragglers=S)
+        plans.append(compile_plan(p, sol, rows_per_tile=60, stragglers=S,
+                                  speeds=speeds0))
+    stack = build_plan_stack(plans)
+    assert stack.n_plans == 3
+    B = 60
+    speeds = rng.exponential(1.0, (B, 6)) + 0.05
+    pidx = rng.integers(0, 3, B)
+    bt = simulate_batch(stack, speeds, plan_index=pidx)
+    for b in range(B):
+        ref = simulate_step(plans[pidx[b]], speeds[b])
+        assert bt.completion_times[b] == ref.completion_time
+
+
+def test_simulate_batch_infeasible_raise_and_inf():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), stragglers=0)
+    plan = compile_plan(p, sol, rows_per_tile=12, stragglers=0)
+    active = [w for w in range(6) if plan.n_valid[w] > 0]
+    drop = np.zeros((2, 6), dtype=bool)
+    drop[1, active[0]] = True  # S=0 plan cannot lose anyone
+    speeds = np.ones((2, 6))
+    with pytest.raises(RuntimeError):
+        simulate_batch(plan, speeds, dropped=drop, on_infeasible="raise")
+    bt = simulate_batch(plan, speeds, dropped=drop, on_infeasible="inf")
+    assert bt.feasible[0] and not bt.feasible[1]
+    assert np.isfinite(bt.completion_times[0])
+    assert np.isinf(bt.completion_times[1])
+
+
+def test_simulate_batch_rejects_wrong_length_drop_sequence():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), stragglers=1)
+    plan = compile_plan(p, sol, rows_per_tile=12, stragglers=1)
+    with pytest.raises(ValueError, match="entries for"):
+        simulate_batch(plan, np.ones((4, 6)), dropped=[(), (5,)])
+
+
+def test_simulate_batch_accepts_int01_mask():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), stragglers=1)
+    plan = compile_plan(p, sol, rows_per_tile=12, stragglers=1)
+    m = np.zeros((2, 6), dtype=int)
+    m[1, 2] = 1
+    a = simulate_batch(plan, np.ones((2, 6)), dropped=m)
+    b = simulate_batch(plan, np.ones((2, 6)), dropped=m.astype(bool))
+    assert np.array_equal(a.completion_times, b.completion_times)
+
+
+def test_include_mask_ignores_out_of_range_ids():
+    p = cyclic_placement(6, 6, 3)
+    sol = solve_assignment(p, np.ones(6), stragglers=1)
+    plan = compile_plan(p, sol, rows_per_tile=12, stragglers=1)
+    ref = plan.include_mask(())
+    # -1 pad sentinels / foreign ids must not alias to real machines
+    assert np.array_equal(plan.include_mask((-1, 99)), ref)
+
+
+def test_straggler_sample_batch_semantics():
+    proc = StragglerProcess(count=2, mode="slowest", seed=0)
+    speeds = np.array([[3.0, 1.0, 2.0, 4.0],
+                       [0.5, 9.0, 8.0, 0.1]])
+    mask = proc.sample_batch([0, 1, 2, 3], speeds, 4)
+    assert mask.shape == (2, 4)
+    assert set(np.flatnonzero(mask[0])) == {1, 2}   # two slowest of draw 0
+    assert set(np.flatnonzero(mask[1])) == {0, 3}
+    uni = StragglerProcess(count=1, mode="uniform", seed=1)
+    m = uni.sample_batch([1, 3, 5], np.ones((50, 6)), 6)
+    assert np.all(m.sum(axis=1) == 1)
+    assert not m[:, [0, 2, 4]].any()                 # only available machines
+    none = StragglerProcess(count=0).sample_batch([0, 1], np.ones((3, 2)), 2)
+    assert not none.any()
+
+
+# ---------------------------------------------------------------------- #
+# 3. Sweep driver + scheduler lookahead
+# ---------------------------------------------------------------------- #
+def test_sweep_grid_crosses_policies_and_marks_infeasible():
+    placements = {
+        "cyclic": cyclic_placement(6, 6, 3),
+        "repetition": repetition_placement(6, 6, 3),
+    }
+    res = sweep_grid(
+        placements, tolerances=(0, 1),
+        straggler_policies=(("none", 0), ("uniform", 1)),
+        cfg=SweepConfig(n_draws=100, seed=5),
+    )
+    assert len(res) == 8  # 2 placements x 2 tolerances x 2 policies
+    by_name = {r.name: r for r in res}
+    # A forced straggler breaks every S=0 plan and no S=1 plan.
+    for pname in placements:
+        assert by_name[f"{pname}/S=0/uniformx1"].summary["feasible_frac"] == 0.0
+        assert by_name[f"{pname}/S=1/uniformx1"].summary["feasible_frac"] == 1.0
+        assert by_name[f"{pname}/S=0/nonex0"].summary["feasible_frac"] == 1.0
+    r = by_name["cyclic/S=0/nonex0"]
+    assert r.completion_times.shape == (100,)
+    assert r.summary["p50"] <= r.summary["p95"] <= r.summary["p99"]
+
+
+def test_sweep_grid_reproducible_and_grid_shape_independent():
+    placements = {"cyclic": cyclic_placement(5, 5, 3)}
+    a = sweep_grid(placements, (0,), (("none", 0),),
+                   SweepConfig(n_draws=50, seed=9))
+    b = sweep_grid(placements, (0,), (("none", 0),),
+                   SweepConfig(n_draws=50, seed=9))
+    assert np.array_equal(a[0].completion_times, b[0].completion_times)
+    # A cell's stream depends on (seed, cell name) only — adding other
+    # cells to the grid must not change it.
+    wide = sweep_grid(
+        {"cyclic": cyclic_placement(5, 5, 3),
+         "repetition": repetition_placement(6, 6, 3)},
+        (0, 1), (("none", 0), ("uniform", 1)),
+        SweepConfig(n_draws=50, seed=9))
+    same = {r.name: r for r in wide}[a[0].name]
+    assert np.array_equal(a[0].completion_times, same.completion_times)
+
+
+def test_sweep_churn_memoizes_and_accounts_waste():
+    p = cyclic_placement(6, 6, 3)
+    trace = MarkovChurnTrace(6, p_preempt=0.25, p_arrive=0.6, seed=2,
+                             placement=p, min_holders=2)
+    res = sweep_churn(p, (trace.step() for _ in range(25)),
+                      cfg=SweepConfig(n_draws=64, seed=4), tolerance=1,
+                      n_steps=25)
+    assert len(res.steps) == 25
+    assert res.completion_times.shape == (25, 64)
+    assert np.isfinite(res.completion_times).all()
+    assert res.total_waste >= 0
+    assert res.total_waste == sum(s.waste for s in res.steps)
+    # steps without membership change must not re-plan
+    for prev, cur in zip(res.steps, res.steps[1:]):
+        if prev.available == cur.available:
+            assert not cur.replanned and cur.waste == 0
+
+
+def test_summarize_handles_inf():
+    s = summarize(np.array([1.0, 2.0, np.inf, 3.0]))
+    assert s["feasible_frac"] == 0.75
+    assert s["mean"] == 2.0
+    s_all_bad = summarize(np.array([np.inf, np.inf]))
+    assert s_all_bad["feasible_frac"] == 0.0 and s_all_bad["mean"] == np.inf
+
+
+def test_scheduler_lookahead_selects_from_distributions():
+    p = cyclic_placement(6, 6, 3)
+    sched = USECScheduler(p, rows_per_tile=48, initial_speeds=np.ones(6))
+    # Environment drops one worker per step: S=0 must score +inf.
+    best, scores = sched.select_straggler_tolerance(
+        range(6), candidates=(0, 1, 2), n_draws=128, expected_stragglers=1)
+    assert scores[0] == float("inf")
+    assert best >= 1
+    assert scores[best] <= min(v for k, v in scores.items() if k != best)
+    # Calm environment: redundancy only costs time, S=0 wins.
+    best0, _ = sched.select_straggler_tolerance(
+        range(6), candidates=(0, 1, 2), n_draws=128, expected_stragglers=0)
+    assert best0 == 0
+
+
+def test_scheduler_lookahead_commit_replans_with_new_tolerance():
+    p = cyclic_placement(6, 6, 3)
+    sched = USECScheduler(p, rows_per_tile=48, initial_speeds=np.ones(6),
+                          stragglers=0)
+    best, _ = sched.select_straggler_tolerance(
+        range(6), candidates=(0, 1), n_draws=64, expected_stragglers=1,
+        commit=True)
+    assert sched.stragglers == best == 1
+    step = sched.plan_step(available=range(6))
+    assert step.plan.stragglers == 1
+
+
+def test_scheduler_lookahead_commit_keeps_explicit_t_max():
+    p = cyclic_placement(6, 6, 3)
+    sched = USECScheduler(p, rows_per_tile=48, initial_speeds=np.ones(6),
+                          stragglers=0, t_max=40)
+    sched.select_straggler_tolerance(
+        range(6), candidates=(0, 1), n_draws=32, expected_stragglers=1,
+        commit=True)
+    assert sched.t_max == 40  # user-pinned static shape survives commit
+    assert sched.plan_step(available=range(6)).plan.t_max == 40
+
+
+def test_scheduler_lookahead_scores_use_common_random_numbers():
+    p = cyclic_placement(6, 6, 3)
+    sched = USECScheduler(p, rows_per_tile=48, initial_speeds=np.ones(6))
+    _, a = sched.select_straggler_tolerance(
+        range(6), candidates=(1, 2), n_draws=100, seed=0)
+    _, b = sched.select_straggler_tolerance(
+        range(6), candidates=(2,), n_draws=100, seed=0)
+    assert a[2] == b[2]  # a candidate's score is independent of the set
