@@ -1,0 +1,181 @@
+"""Trajectory benchmark of the live elastic runner (real execution, 4 workers).
+
+Drives :class:`repro.runtime.ElasticRunner` through Markov churn on forced
+host devices and emits a ``BENCH_elastic_runner.json`` trajectory:
+
+- **steps/sec** — measured wall time of the jitted shard_map step,
+- **replan latency** — host-side planning cost per step, split by plan-cache
+  hit (array swap) vs miss (LP solve + filling + compile + block expansion),
+- **transition waste** — rows moved beyond the unavoidable ones per re-plan,
+- **cross-check** — the runner's per-step modeled completion (derived from
+  the *block plan* the devices actually executed) against the analytical
+  predictions of :func:`repro.runtime.simulate.simulate_batch` (derived from
+  the *compiled plan*). At S=0 the two must agree to float precision — two
+  independent code paths computing the paper's Definition 3. At S=1 the gap
+  is the first-arrival headroom: the synchronous psum barrier waits for all
+  holders, the paper's master takes the fastest — the measured upside of a
+  future async-combine runtime.
+
+Run:  PYTHONPATH=src python benchmarks/bench_elastic_runner.py [--steps 24]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.launch.hostdev import ensure_host_devices  # noqa: E402
+
+N_WORKERS = 4
+ensure_host_devices(N_WORKERS)
+
+import numpy as np  # noqa: E402
+
+BASE_SPEEDS = [1000.0, 1400.0, 1900.0, 2600.0]   # rows/second
+DIM = 768
+
+
+def _markov_events(trace, n):
+    for _ in range(n):
+        yield trace.step()
+
+
+def run_phase(x, s_tol: int, steps: int, seed: int):
+    """One churn trajectory at tolerance S; returns (trajectory, summary)."""
+    from repro.core import cyclic_placement
+    from repro.core.elastic import MarkovChurnTrace
+    from repro.runtime import (
+        ElasticRunner,
+        RunnerConfig,
+        SyntheticSpeedClock,
+        quantize_unit,
+    )
+    from repro.runtime.simulate import simulate_batch
+
+    placement = cyclic_placement(N_WORKERS, N_WORKERS, 2 + s_tol)
+    clock = SyntheticSpeedClock(BASE_SPEEDS, jitter_sigma=0.05, seed=seed)
+    runner = ElasticRunner(
+        x, placement,
+        RunnerConfig(block_rows=16, stragglers=s_tol, verify="exact"),
+        initial_speeds=BASE_SPEEDS,
+        clock=clock,
+    )
+    trace = MarkovChurnTrace(
+        N_WORKERS, p_preempt=0.2, p_arrive=0.6, min_available=1,
+        seed=seed, placement=placement, min_holders=1 + s_tol,
+    )
+    rng = np.random.default_rng(seed + 7)
+    w = quantize_unit(rng.normal(size=DIM))
+    traj = []
+    for i, ev in enumerate(_markov_events(trace, steps)):
+        y, rep = runner.step(w, event=ev)
+        plan = runner.current_plan
+        # Analytical prediction from the compiled plan, under the realized
+        # speeds the clock drew for this step. simulate's unit is tile-time
+        # at speed tiles/sec; the clock speaks rows/sec -> scale by
+        # rows_per_tile to land in seconds.
+        realized = clock.history[i]
+        predicted = float(simulate_batch(
+            plan, (realized / runner.rows_per_tile)[None, :]
+        ).completion_times[0])
+        w = quantize_unit(y)
+        traj.append({
+            "step": rep.step,
+            "available": list(rep.available),
+            "replanned": rep.replanned,
+            "plan_cache_hit": rep.plan_cache_hit,
+            "replan_s": rep.replan_s,
+            "wall_s": rep.wall_s,
+            "modeled_completion_s": rep.modeled_completion,
+            "predicted_completion_s": predicted,
+            "waste_rows": rep.waste,
+            "jit_cache_size": rep.jit_cache_size,
+        })
+
+    modeled = np.array([t["modeled_completion_s"] for t in traj])
+    predicted = np.array([t["predicted_completion_s"] for t in traj])
+    rel = np.abs(modeled - predicted) / np.maximum(predicted, 1e-12)
+    wall = np.array([t["wall_s"] for t in traj])
+    replan = np.array([t["replan_s"] for t in traj])
+    hits = np.array([t["plan_cache_hit"] for t in traj], dtype=bool)
+    misses = np.array([t["replanned"] and not t["plan_cache_hit"] for t in traj],
+                      dtype=bool)
+    summary = {
+        "stragglers": s_tol,
+        "steps": steps,
+        "steps_per_sec": float(len(traj) / wall.sum()),
+        "mean_wall_s": float(wall.mean()),
+        "replan_latency_mean_s": float(replan.mean()),
+        "replan_latency_cache_hit_s": float(replan[hits].mean()) if hits.any() else None,
+        "replan_latency_cache_miss_s": float(replan[misses].mean()) if misses.any() else None,
+        "plans_compiled": runner.plans_compiled,
+        "plan_cache_hits": runner.cache_hits,
+        "churn_events": runner.churn_events,
+        "total_waste_rows": runner.total_waste,
+        "jit_cache_size": runner.executor_cache_size,
+        "crosscheck_max_rel_err": float(rel.max()),
+        # barrier_vs_first_arrival > 1 means an async combine would win
+        "barrier_vs_first_arrival": float((modeled / predicted).mean()),
+    }
+    if s_tol == 0 and summary["crosscheck_max_rel_err"] > 1e-9:
+        raise AssertionError(
+            f"S=0 cross-check failed: runner modeled completion diverges from "
+            f"simulate_batch by {summary['crosscheck_max_rel_err']:.3e}"
+        )
+    if runner.executor_cache_size != 1:
+        raise AssertionError(
+            f"executor recompiled: {runner.executor_cache_size} jit entries")
+    return traj, summary
+
+
+def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
+        csv: bool = True):
+    from repro.runtime import make_exact_matrix
+
+    x = make_exact_matrix(DIM, seed)
+
+    phases = {}
+    for s_tol in (0, 1):
+        traj, summary = run_phase(x, s_tol, steps, seed)
+        phases[f"S{s_tol}"] = {"summary": summary, "trajectory": traj}
+        if csv:
+            tag = f"elastic_runner_S{s_tol}"
+            print(f"{tag}_steps_per_sec,{1e6 / summary['steps_per_sec']:.1f},"
+                  f"{summary['steps_per_sec']:.2f} steps/s over {steps} steps, "
+                  f"{summary['churn_events']} churn events")
+            print(f"{tag}_replan_latency,{summary['replan_latency_mean_s'] * 1e6:.1f},"
+                  f"cache hit "
+                  f"{(summary['replan_latency_cache_hit_s'] or 0) * 1e6:.0f}us vs "
+                  f"miss {(summary['replan_latency_cache_miss_s'] or 0) * 1e6:.0f}us; "
+                  f"{summary['plans_compiled']} compiled / "
+                  f"{summary['plan_cache_hits']} hits")
+            print(f"{tag}_crosscheck,{summary['crosscheck_max_rel_err']:.3e},"
+                  f"max rel err vs simulate_batch; barrier/first-arrival = "
+                  f"{summary['barrier_vs_first_arrival']:.3f}; "
+                  f"waste {summary['total_waste_rows']} rows; "
+                  f"jit entries {summary['jit_cache_size']}")
+
+    doc = {
+        "benchmark": "elastic_runner",
+        "n_workers": N_WORKERS,
+        "dim": DIM,
+        "base_speeds_rows_per_s": BASE_SPEEDS,
+        "seed": seed,
+        "phases": phases,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    if csv:
+        print(f"# wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_elastic_runner.json")
+    args = ap.parse_args()
+    run(steps=args.steps, seed=args.seed, out=args.out)

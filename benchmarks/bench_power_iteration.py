@@ -15,6 +15,11 @@ random stragglers per iteration (bottom panel, S=2 redundancy).
 
 The paper reports ~20% latency gain for the heterogeneous assignment;
 the numbers below print the reproduced gain.
+
+This bench stays on the *analytical* latency model (simulate.py) so the
+Fig. 4 comparison is noise-free; the live-execution counterpart — real
+devices, churn, measured wall clock — is benchmarks/bench_elastic_runner.py
+driving repro.runtime.elastic_runner.
 """
 
 import time

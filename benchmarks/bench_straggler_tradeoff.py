@@ -5,6 +5,11 @@ bound (terminates within N_g iterations), the solver's runtime scaling, and
 — via the batched scenario engine — the *empirical* side of the trade-off:
 completion-time distributions per S under a stochastic straggler process,
 and which S the scheduler's simulated-distribution lookahead selects.
+
+(Everything here is planning/simulation; the redundancy cost of S on real
+devices — the psum barrier waiting on all 1+S holders — is measured by
+benchmarks/bench_elastic_runner.py, whose S=1 phase reports the
+barrier-vs-first-arrival gap.)
 """
 
 import time

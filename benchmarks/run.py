@@ -40,9 +40,39 @@ def main(argv=None) -> None:
     bench_power_iteration.run(dim=6000 if args.full else 600)
     print("# --- extension: transition-waste-averse re-planning (ref [2] metric) ---")
     bench_transition_waste.run()
+    print("# --- live elastic runner: real execution under Markov churn ---")
+    _run_elastic_runner_subprocess(steps=24 if args.full else 12)
     print("# --- roofline (from the multi-pod dry-run artifacts) ---")
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s")
+
+
+def _run_elastic_runner_subprocess(steps: int) -> None:
+    """The runner needs 4 forced host devices; jax pins the device count at
+    first init, so it gets its own interpreter (same trick as the tests)."""
+    import os
+    import subprocess
+
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    # Strip only a pre-existing device-count force (hostdev must set its
+    # own); every other XLA flag the user exported is kept.
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith("--xla_force_host_platform_device_count")]
+    if flags:
+        env["XLA_FLAGS"] = " ".join(flags)
+    else:
+        env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(bench_dir, "bench_elastic_runner.py"),
+         "--steps", str(steps)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(bench_dir),
+    )
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stdout.write(f"# elastic runner bench FAILED (rc={proc.returncode})\n")
+        sys.stdout.write(proc.stderr[-2000:] + "\n")
 
 
 if __name__ == "__main__":

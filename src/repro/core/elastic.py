@@ -31,6 +31,12 @@ class ElasticEvent:
     arrived: Tuple[int, ...]
     available: Tuple[int, ...]
 
+    @property
+    def is_churn(self) -> bool:
+        """True when membership actually changed (traces emit one event per
+        step, most of which are no-ops; runners count only real churn)."""
+        return bool(self.preempted or self.arrived)
+
 
 class AvailabilityTrace:
     """Generates the sequence N_0, N_1, ... of available machine sets."""

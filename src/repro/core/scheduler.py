@@ -9,7 +9,9 @@ Per time step:
   5. hand the plan (plain arrays) to the execution runtime.
 
 The scheduler is pure host-side numpy; jitted executors consume its plans as
-inputs, so membership/speed changes never recompile.
+inputs, so membership/speed changes never recompile. The live execution loop
+around it (trace -> measured durations -> plan -> devices) is
+:class:`repro.runtime.elastic_runner.ElasticRunner`.
 """
 
 from __future__ import annotations
@@ -83,6 +85,11 @@ class USECScheduler:
         absorbs integerization splits at tile boundaries."""
         z = self.placement.storage_sets()
         return max(len(zn) for zn in z) * (1 + self.stragglers + 1)
+
+    @property
+    def speeds(self) -> np.ndarray:
+        """Current EWMA speed estimates (copy) — what the next plan will see."""
+        return self.estimator.speeds
 
     def plan_step(
         self,

@@ -60,6 +60,19 @@ def usec_matvec(
     return y[:, 0] if squeeze else y
 
 
+def executor_matmul(mode: Optional[str] = None):
+    """Block-level matmul for the shard_map executors, with kernel dispatch.
+
+    ``repro.runtime.executor.make_matvec_executor`` takes a ``matmul(xb, w2)``
+    callable applied per (block_rows, k) block inside the per-worker
+    ``fori_loop``. This returns one routed through :func:`usec_matvec`, so the
+    executor runs the Pallas kernel on TPU, the jnp reference on CPU, and the
+    interpreted kernel when tests ask for exact kernel semantics — the same
+    dispatch policy as every other op in this module.
+    """
+    return functools.partial(usec_matvec, mode=mode)
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,

@@ -1,0 +1,44 @@
+"""Force N host (CPU) devices before jax initializes — jax-free on purpose.
+
+The elastic runner, the multi-device examples and the runner benchmark all
+need more than this container's single CPU device. jax pins the device count
+at first backend init, so the flag has to be in ``XLA_FLAGS`` *before any
+jax import*. This module imports nothing heavy, so entry points can call
+:func:`ensure_host_devices` as their very first statement.
+
+``tests/conftest.py::run_with_devices`` does the same thing for test
+subprocesses; this is the library-side equivalent for examples/benchmarks.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int) -> int:
+    """Request ``n`` forced host devices; returns the count actually in force.
+
+    - If jax is already imported, the device count is frozen: return the
+      existing count (callers decide whether that is enough).
+    - If ``XLA_FLAGS`` already forces a count, keep it (the user or a parent
+      process chose it deliberately).
+    - Otherwise append the force flag for ``n`` devices.
+    """
+    if "jax" in sys.modules:
+        import jax  # already initialized; count is whatever it is
+
+        return jax.local_device_count()
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG in flags:
+        for tok in flags.split():
+            if tok.startswith(_FLAG + "="):
+                try:
+                    return int(tok.split("=", 1)[1])
+                except ValueError:  # malformed; leave it to jax to complain
+                    return n
+        return n
+    os.environ["XLA_FLAGS"] = (flags + f" {_FLAG}={n}").strip()
+    return n

@@ -1,12 +1,33 @@
-"""Distributed execution substrate: USEC executors, wall-clock simulation,
-batched scenario engine, checkpointing, gradient compression.
+"""Distributed execution substrate: USEC executors, the live elastic runner,
+wall-clock simulation, batched scenario engine, checkpointing, gradient
+compression.
 
-The simulation/scenario layer is pure NumPy and imports eagerly; the
-executor/checkpoint layer needs jax and resolves lazily (PEP 562), so
-`pip install usec-repro` without the ``[jax]`` extra can still run the
-planners, the batched simulator and the sweep driver.
+Two complementary evaluation paths live here:
+
+- **simulation** (:mod:`.simulate`, :mod:`.scenarios`) — pure-NumPy
+  analytical completion times, batched over thousands of scenario draws;
+- **real execution** (:mod:`.elastic_runner`, :mod:`.executor`) — churn-driven
+  steps actually run on devices through the shard_map executor, with EWMA
+  speed re-estimation from measured step times.
+
+The simulation/scenario layer and the runner's host-side classes are pure
+NumPy and import eagerly; the executor/checkpoint layer needs jax and
+resolves lazily (PEP 562), so `pip install usec-repro` without the ``[jax]``
+extra can still run the planners, the batched simulator and the sweep driver
+(constructing an :class:`ElasticRunner` is what first touches jax).
 """
 
+from .elastic_runner import (
+    ElasticRunner,
+    HostSharedClock,
+    PowerIterationResult,
+    RunnerConfig,
+    StepReport,
+    SyntheticSpeedClock,
+    make_exact_matrix,
+    quantize_unit,
+    run_power_iteration,
+)
 from .scenarios import (
     ChurnStep,
     ChurnSweepResult,
@@ -36,6 +57,7 @@ _JAX_EXPORTS = {
     "StagedMatrix": "executor",
     "block_plan": "executor",
     "make_matvec_executor": "executor",
+    "refresh_include": "executor",
     "stage_matrix": "executor",
     "latest_checkpoint": "checkpoint",
     "restore_checkpoint": "checkpoint",
@@ -59,20 +81,30 @@ __all__ = [
     "BlockPlan",
     "ChurnStep",
     "ChurnSweepResult",
+    "ElasticRunner",
+    "HostSharedClock",
     "PlanStack",
+    "PowerIterationResult",
+    "RunnerConfig",
     "ScenarioResult",
     "SpeedProcess",
     "StagedMatrix",
+    "StepReport",
     "StepTiming",
     "StragglerProcess",
     "SweepConfig",
+    "SyntheticSpeedClock",
     "block_plan",
     "build_plan_stack",
     "draw_scenarios",
     "exponential_speeds",
     "latest_checkpoint",
+    "make_exact_matrix",
     "make_matvec_executor",
+    "quantize_unit",
+    "refresh_include",
     "restore_checkpoint",
+    "run_power_iteration",
     "save_checkpoint",
     "simulate_batch",
     "simulate_step",

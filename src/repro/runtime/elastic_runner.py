@@ -1,0 +1,568 @@
+"""Live elastic execution: churn-driven power iteration on real devices.
+
+Everything below PR 1 *simulated* completion times; this module actually
+executes a placement's plan across membership changes. It closes the loop the
+paper runs on EC2 (§V): an :class:`~repro.core.elastic.AvailabilityTrace`
+feeds :class:`~repro.core.elastic.ElasticEvent`\\ s into a master that
+
+1. re-estimates worker speeds (EWMA, Algorithm 1 line 4) from *measured*
+   per-worker step times of the previous step,
+2. re-plans on membership change — compiled plans are **memoized per
+   membership** and invalidated only when the speed estimate drifts past a
+   tolerance, so revisited availability states reuse their plan in O(N),
+3. executes the step through the shard_map executor
+   (:func:`repro.runtime.executor.make_matvec_executor`) with the Pallas
+   ``usec_matvec`` kernel on TPU (jnp reference on CPU — the dispatch of
+   :func:`repro.kernels.ops.executor_matmul`).
+
+The static-shape contract: every array is padded to the **max-N membership**
+(the full machine population). A preempted machine is a worker slot with
+``n_blocks == 0`` and all-zero include weights — its shard runs an empty
+``fori_loop`` and contributes zeros to the ``psum``. Membership changes
+therefore swap plan *arrays* in place; the jitted step never recompiles
+(:attr:`ElasticRunner.executor_cache_size` stays at 1, asserted by the
+example and the runner tests).
+
+Per-worker step times: on a real heterogeneous deployment each worker
+reports its own wall time. A single timeshared host cannot observe those, so
+the runner takes a pluggable clock — :class:`HostSharedClock` apportions the
+measured step wall time by row share (the truth on a timeshared CPU), and
+:class:`SyntheticSpeedClock` replays an EC2-like heterogeneous speed process
+so examples/benchmarks exercise the EWMA adaptation reproducibly. Real step
+wall time is always measured and reported (steps/sec telemetry).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.elastic import ElasticEvent, transition_waste
+from repro.core.placement import Placement
+from repro.core.scheduler import StepPlan, USECScheduler
+
+__all__ = [
+    "ElasticRunner",
+    "HostSharedClock",
+    "PowerIterationResult",
+    "RunnerConfig",
+    "StepReport",
+    "SyntheticSpeedClock",
+    "make_exact_matrix",
+    "quantize_unit",
+    "run_power_iteration",
+]
+
+
+# ---------------------------------------------------------------------- #
+# Configuration / per-step report
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class RunnerConfig:
+    """Knobs of the live runner.
+
+    block_rows: fixed-size work unit of the executor; must divide
+      rows_per_tile (plans are compiled with ``row_align == block_rows``).
+    stragglers: straggler tolerance S baked into every plan.
+    gamma: EWMA mixing factor for the speed estimator.
+    speed_tolerance: a memoized plan for a revisited membership is reused
+      while ``max_n |s_hat[n]/s_plan[n] - 1| <= speed_tolerance`` over the
+      available machines; past that the drift forces a fresh solve.
+    matmul_mode: kernel dispatch for :func:`repro.kernels.ops.executor_matmul`
+      (None = Pallas on TPU, jnp reference elsewhere).
+    verify: per-step output check against a float64 host reference —
+      ``"exact"`` (bitwise; integer-valued data), ``"allclose"``, or None.
+    allclose_atol: tolerance of the ``"allclose"`` mode.
+    """
+
+    block_rows: int = 16
+    stragglers: int = 0
+    gamma: float = 0.5
+    speed_tolerance: float = 0.10
+    matmul_mode: Optional[str] = None
+    verify: Optional[str] = None
+    allclose_atol: float = 1e-3
+
+
+@dataclass
+class StepReport:
+    """Telemetry of one executed elastic step."""
+
+    step: int
+    available: Tuple[int, ...]
+    replanned: bool            # a different plan took effect this step
+    plan_cache_hit: bool       # ... and it came from the membership cache
+    replan_s: float            # host-side planning latency (solve+compile or cache swap)
+    wall_s: float              # measured device step wall time (jit call, blocked)
+    modeled_completion: float  # max over loaded workers of clocked duration
+    straggled: Tuple[int, ...]
+    waste: int                 # transition waste vs the previous step's plan
+    jit_cache_size: int        # executor compile count so far (stays 1)
+    measured: Dict[int, float] # per-worker durations fed to the EWMA next step
+    speeds_hat: np.ndarray     # estimator state the plan was built under
+
+
+# ---------------------------------------------------------------------- #
+# Per-worker clocks
+# ---------------------------------------------------------------------- #
+class HostSharedClock:
+    """Per-worker durations on a timeshared host: wall time × row share.
+
+    Forced host devices execute on one CPU, so worker n's slice of the
+    measured wall clock is (to first order) its share of the total assigned
+    rows. The induced throughput ``nu_n = load_n / duration_n`` is equal
+    across workers — which is the truth on a timeshared host, so the EWMA
+    converges to uniform speeds.
+
+    Clocks receive per-worker **row** loads (not tile units): row counts
+    mean the same thing under every placement, so modeled completion times
+    are comparable across placements with different tile sizes.
+    """
+
+    def durations(
+        self, row_loads: np.ndarray, available: Sequence[int], wall: float
+    ) -> Dict[int, float]:
+        loaded = [n for n in available if row_loads[n] > 0]
+        total = float(sum(row_loads[n] for n in loaded))
+        if total <= 0:
+            return {}
+        return {n: wall * float(row_loads[n]) / total for n in loaded}
+
+
+class SyntheticSpeedClock:
+    """Replays a heterogeneous speed process: duration = row-load / speed.
+
+    Speeds are in rows per second. Models the paper's EC2 observation
+    (persistently different speeds with per-step jitter) on a host that
+    cannot produce real heterogeneity. The realized per-step speed vectors
+    are recorded in :attr:`history` so benchmarks can cross-check the
+    runner's step times against :func:`repro.runtime.simulate.simulate_batch`
+    predictions.
+    """
+
+    def __init__(
+        self,
+        base: Sequence[float],
+        jitter_sigma: float = 0.0,
+        drift_sigma: float = 0.0,
+        seed: int = 0,
+    ):
+        from .simulate import SpeedProcess
+
+        self.process = SpeedProcess(
+            base=np.asarray(base, dtype=np.float64),
+            jitter_sigma=jitter_sigma,
+            drift_sigma=drift_sigma,
+            seed=seed,
+        )
+        self.history: List[np.ndarray] = []
+
+    def durations(
+        self, row_loads: np.ndarray, available: Sequence[int], wall: float
+    ) -> Dict[int, float]:
+        s = self.process.sample()
+        self.history.append(s)
+        return {
+            n: float(row_loads[n]) / float(s[n])
+            for n in available
+            if row_loads[n] > 0
+        }
+
+
+# ---------------------------------------------------------------------- #
+# The runner
+# ---------------------------------------------------------------------- #
+@dataclass
+class _CacheEntry:
+    step_plan: StepPlan
+    block: "object"                    # BlockPlan
+    include0: np.ndarray               # no-straggler include weights
+    rows: Dict[int, Set[int]]          # global rows per machine (waste accounting)
+    s_plan: np.ndarray                 # estimator state the plan was built under
+    block_loads: np.ndarray            # (N,) tile-unit loads derived from blocks
+    dev: Tuple                         # (slot, off, goff, include0, n_blocks) on device
+
+
+class ElasticRunner:
+    """Executes USEC matvec steps across an elastic availability trace.
+
+    Build once per (matrix, placement); then per step optionally apply an
+    :class:`ElasticEvent` and call :meth:`step`. All jax state (mesh,
+    executor, staged matrix) is constructed in ``__init__`` and never
+    rebuilt.
+    """
+
+    def __init__(
+        self,
+        x: np.ndarray,
+        placement: Placement,
+        cfg: RunnerConfig = RunnerConfig(),
+        initial_speeds: Optional[Sequence[float]] = None,
+        clock=None,
+        mesh=None,
+        worker_axis: str = "data",
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import executor_matmul
+        from repro.launch.mesh import make_worker_mesh
+
+        from .executor import make_matvec_executor, stage_matrix
+
+        self.cfg = cfg
+        self.placement = placement
+        N, G = placement.n_machines, placement.n_tiles
+        q, _ = x.shape
+        if q % G:
+            raise ValueError(f"X has {q} rows, not a multiple of G={G} tiles")
+        self.rows_per_tile = q // G
+        if self.rows_per_tile % cfg.block_rows:
+            raise ValueError(
+                f"block_rows={cfg.block_rows} must divide rows_per_tile="
+                f"{self.rows_per_tile}"
+            )
+        self.rows_total = q
+        self.scheduler = USECScheduler(
+            placement,
+            rows_per_tile=self.rows_per_tile,
+            initial_speeds=(
+                np.ones(N) if initial_speeds is None
+                else np.asarray(initial_speeds, dtype=np.float64)
+            ),
+            stragglers=cfg.stragglers,
+            gamma=cfg.gamma,
+            row_align=cfg.block_rows,
+        )
+        self.clock = clock if clock is not None else HostSharedClock()
+        # Static block capacity: a worker never computes more rows than it
+        # stores (segments of one tile are disjoint), so stored-tiles *
+        # rows_per_tile / block_rows bounds its trip count for EVERY
+        # membership — one (N, B) shape for the whole run.
+        z = placement.storage_sets()
+        self.b_max = max(len(zn) for zn in z) * (self.rows_per_tile // cfg.block_rows)
+
+        self._staged = stage_matrix(x, placement, self.rows_per_tile)
+        self.mesh = mesh if mesh is not None else make_worker_mesh(N)
+        self.worker_axis = worker_axis
+        self._executor = make_matvec_executor(
+            self.mesh, worker_axis, rows_total=q, block_rows=cfg.block_rows,
+            matmul=executor_matmul(cfg.matmul_mode),
+        )
+        self._staged_dev = jnp.asarray(self._staged.staged)
+        self._jnp = jnp
+
+        self._x64 = x.astype(np.float64) if cfg.verify else None
+        self._plan_cache: Dict[Tuple[int, ...], _CacheEntry] = {}
+        self._membership: Tuple[int, ...] = tuple(range(N))
+        self._current: Optional[_CacheEntry] = None
+        self._pending_loads: Dict[int, float] = {}
+        self._pending_durations: Dict[int, float] = {}
+        self._step = 0
+        self.churn_events = 0
+        self.plans_compiled = 0
+        self.cache_hits = 0
+        self.total_waste = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def membership(self) -> Tuple[int, ...]:
+        return self._membership
+
+    @property
+    def current_plan(self):
+        """The :class:`~repro.core.plan.CompiledPlan` of the last executed
+        step (None before the first step) — benchmarks cross-check it
+        against the analytical simulator."""
+        return None if self._current is None else self._current.step_plan.plan
+
+    @property
+    def executor_cache_size(self) -> int:
+        """Compiled-program count of the jitted step (expected: 1 forever)."""
+        f = self._executor
+        return int(f._cache_size()) if hasattr(f, "_cache_size") else -1
+
+    def apply_event(self, ev: ElasticEvent) -> None:
+        """Adopt the event's availability set (validates tile reachability)."""
+        avail = tuple(sorted(ev.available))
+        if not avail:
+            # Let restrict() raise the canonical LostTileError with context.
+            self.placement.restrict(avail)
+        if ev.is_churn:
+            self.churn_events += 1
+        if avail != self._membership:
+            self.placement.restrict(avail)   # raises LostTileError on data loss
+            self._membership = avail
+
+    # ------------------------------------------------------------------ #
+    def _plan_for(self, avail: Tuple[int, ...]) -> Tuple[_CacheEntry, bool]:
+        """Memoized planning: returns (entry, cache_hit)."""
+        from .executor import block_plan
+
+        s_hat = self.scheduler.speeds
+        entry = self._plan_cache.get(avail)
+        if entry is not None:
+            # The assignment LP is scale-invariant, so only *relative* speed
+            # drift can make a memoized plan stale — compare the mean-
+            # normalized vectors (the EWMA's absolute scale is tile-units
+            # per wall-second and moves a lot while the ratios stay put).
+            idx = np.asarray(avail, dtype=np.int64)
+            a = s_hat[idx] / s_hat[idx].mean()
+            b = entry.s_plan[idx] / entry.s_plan[idx].mean()
+            drift = np.max(np.abs(a / b - 1.0))
+            if drift <= self.cfg.speed_tolerance:
+                self.cache_hits += 1
+                return entry, True
+        splan = self.scheduler.plan_step(avail)
+        bp = block_plan(
+            splan.plan, self._staged.slot_of, self.cfg.block_rows,
+            b_max=self.b_max,
+        )
+        rows = {n: splan.plan.rows_of(n) for n in range(self.placement.n_machines)}
+        block_loads = (
+            bp.n_blocks.astype(np.float64) * self.cfg.block_rows / self.rows_per_tile
+        )
+        # Plan arrays live on device with the cache entry: a cache hit (or a
+        # no-straggler step) uploads nothing, so the measured step wall time
+        # is executor time, not host->device transfer.
+        jnp = self._jnp
+        dev = (
+            jnp.asarray(bp.blk_slot), jnp.asarray(bp.blk_off),
+            jnp.asarray(bp.blk_goff), jnp.asarray(bp.blk_include),
+            jnp.asarray(bp.n_blocks),
+        )
+        entry = _CacheEntry(
+            step_plan=splan, block=bp, include0=bp.blk_include.copy(),
+            rows=rows, s_plan=s_hat, block_loads=block_loads, dev=dev,
+        )
+        self._plan_cache[avail] = entry
+        self.plans_compiled += 1
+        return entry, False
+
+    def step(
+        self,
+        w: np.ndarray,
+        event: Optional[ElasticEvent] = None,
+        stragglers: Sequence[int] = (),
+    ) -> Tuple[np.ndarray, StepReport]:
+        """Execute one elastic step ``y = X @ w`` under the current plan.
+
+        ``event`` (if any) is applied before planning; ``stragglers`` are
+        this step's realized stragglers — their copies are masked out of the
+        combine (include weights), exactly one surviving holder per segment
+        delivers. Raises if the straggler set exceeds the plan's tolerance.
+        """
+        from .executor import refresh_include
+
+        jnp = self._jnp
+        if event is not None:
+            self.apply_event(event)
+        t0 = time.perf_counter()
+        # Feed last step's measured durations into the EWMA (Alg. 1 line 4)
+        # BEFORE planning, so the plan sees the freshest estimates.
+        if self._pending_durations:
+            self.scheduler.report(self._pending_loads, self._pending_durations)
+            self._pending_loads, self._pending_durations = {}, {}
+        prev = self._current
+        entry, cache_hit = self._plan_for(self._membership)
+        replanned = prev is None or entry is not prev
+        waste = 0
+        if replanned and prev is not None:
+            preempted = [
+                n for n in range(self.placement.n_machines)
+                if n not in set(self._membership)
+            ]
+            waste = transition_waste(prev.rows, entry.rows, preempted)
+            self.total_waste += waste
+        self._current = entry
+        slot_d, off_d, goff_d, include0_d, nblk_d = entry.dev
+        include_d = (
+            include0_d if not stragglers
+            else jnp.asarray(
+                refresh_include(entry.block, entry.step_plan.plan, stragglers))
+        )
+        replan_s = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        y = self._executor(
+            self._staged_dev,
+            slot_d, off_d, goff_d, include_d, nblk_d, jnp.asarray(w),
+        )
+        y.block_until_ready()
+        wall = time.perf_counter() - t1
+        y = np.asarray(y)
+
+        row_loads = entry.block_loads * self.rows_per_tile
+        durations = self.clock.durations(row_loads, self._membership, wall)
+        # The EWMA is fed tile-unit loads (the LP's unit), so estimated
+        # speeds stay consistent with the planner; clocks see row units.
+        self._pending_loads = {
+            n: float(entry.block_loads[n]) for n in durations
+        }
+        self._pending_durations = durations
+        modeled = max(durations.values()) if durations else 0.0
+
+        if self.cfg.verify:
+            self._verify(y, w)
+
+        self._step += 1
+        report = StepReport(
+            step=self._step,
+            available=self._membership,
+            replanned=replanned,
+            plan_cache_hit=cache_hit,
+            replan_s=replan_s,
+            wall_s=wall,
+            modeled_completion=modeled,
+            straggled=tuple(sorted(int(s) for s in stragglers)),
+            waste=waste,
+            jit_cache_size=self.executor_cache_size,
+            measured=durations,
+            speeds_hat=entry.s_plan,
+        )
+        return y, report
+
+    def _verify(self, y: np.ndarray, w: np.ndarray) -> None:
+        ref = self._x64 @ np.asarray(w, dtype=np.float64)
+        if self.cfg.verify == "exact":
+            if not np.array_equal(y.astype(np.float64), ref):
+                bad = int(np.argmax(y.astype(np.float64) != ref))
+                raise AssertionError(
+                    f"y != X @ w (exact): first mismatch at row {bad}: "
+                    f"{y[bad]!r} vs {ref[bad]!r}"
+                )
+        elif self.cfg.verify == "allclose":
+            err = float(np.max(np.abs(y - ref)))
+            scale = float(np.max(np.abs(ref))) or 1.0
+            if err > self.cfg.allclose_atol * scale:
+                raise AssertionError(f"y != X @ w: max abs err {err} (scale {scale})")
+        else:
+            raise ValueError(f"unknown verify mode {self.cfg.verify!r}")
+
+
+# ---------------------------------------------------------------------- #
+# Power-iteration driver (shared by the example and the benchmark)
+# ---------------------------------------------------------------------- #
+def make_exact_matrix(
+    dim: int, seed: int = 0, lo: int = -3, hi: int = 3, diag: int = 40
+) -> np.ndarray:
+    """Symmetric integer-valued float32 matrix with a dominant eigenvalue.
+
+    Entries are small integers (plus an integer diagonal boost), so with a
+    :func:`quantize_unit` iterate every partial sum of ``X @ w`` stays an
+    exact multiple of the grid well inside float32's mantissa — the
+    construction the runner's ``verify="exact"`` mode relies on. Keep the
+    entry range modest: the exactness argument needs
+    ``dim * max|X| * max|w|`` comfortably below ``2^24 / 2^bits``.
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.integers(lo, hi + 1, size=(dim, dim))
+    return (a + a.T + diag * np.eye(dim, dtype=np.int64)).astype(np.float32)
+
+
+def quantize_unit(v: np.ndarray, bits: int = 8) -> np.ndarray:
+    """Normalize then snap to the 2^-bits grid (entries exactly representable).
+
+    With integer-valued X and a grid-valued w, every partial sum of
+    ``X @ w`` is an exact multiple of 2^-bits well inside float32's 24-bit
+    mantissa — so the distributed combine is bit-identical to a float64 host
+    reference regardless of block order, and the runner's ``verify="exact"``
+    mode holds at every step.
+    """
+    v = np.asarray(v, dtype=np.float64)
+    v = v / np.linalg.norm(v)
+    q = np.round(v * (1 << bits)) / (1 << bits)
+    if not np.any(q):
+        q[int(np.argmax(np.abs(v)))] = 1.0
+    return q.astype(np.float32)
+
+
+@dataclass
+class PowerIterationResult:
+    reports: List[StepReport]
+    eigvec: np.ndarray
+    eigval: float
+    residuals: List[float]          # ||X w - lambda w|| / ||X w|| per step
+    churn_events: int
+    plans_compiled: int
+    cache_hits: int
+    total_waste: int
+    executor_cache_size: int
+
+    @property
+    def total_modeled_latency(self) -> float:
+        return float(sum(r.modeled_completion for r in self.reports))
+
+    @property
+    def steps_per_sec(self) -> float:
+        wall = sum(r.wall_s for r in self.reports)
+        return len(self.reports) / wall if wall > 0 else float("inf")
+
+
+def run_power_iteration(
+    runner: ElasticRunner,
+    n_steps: int,
+    events: Optional[Iterable[ElasticEvent]] = None,
+    w0: Optional[np.ndarray] = None,
+    straggler_sets=None,
+    quantize_bits: Optional[int] = 8,
+    seed: int = 0,
+) -> PowerIterationResult:
+    """Drive ``n_steps`` of elastic power iteration through a churn trace.
+
+    ``events`` yields at most one :class:`ElasticEvent` per step (e.g.
+    :func:`repro.core.elastic.scripted_trace` or a stepped
+    :class:`~repro.core.elastic.MarkovChurnTrace`); ``straggler_sets`` is
+    either an indexable of per-step straggler sets or a callable
+    ``(step, membership) -> sequence`` evaluated *after* the step's event is
+    applied (so stragglers can be drawn from the live membership). With
+    ``quantize_bits`` the iterate stays on an exactly-representable grid
+    (see :func:`quantize_unit`), which is what makes the runner's exact
+    verification meaningful.
+    """
+    rng = np.random.default_rng(seed)
+    ev_iter = iter(events) if events is not None else None
+    dim = runner.rows_total
+    w = np.asarray(w0, dtype=np.float32) if w0 is not None else (
+        rng.normal(size=dim).astype(np.float32)
+    )
+    if quantize_bits:
+        w = quantize_unit(w, quantize_bits)
+
+    reports: List[StepReport] = []
+    residuals: List[float] = []
+    eigval = 0.0
+    for i in range(n_steps):
+        ev = next(ev_iter, None) if ev_iter is not None else None
+        if ev is not None:
+            runner.apply_event(ev)
+        if straggler_sets is None:
+            bad: Tuple[int, ...] = ()
+        elif callable(straggler_sets):
+            bad = tuple(straggler_sets(i, runner.membership))
+        else:
+            bad = tuple(straggler_sets[i])
+        y, rep = runner.step(w, stragglers=bad)
+        reports.append(rep)
+        w64 = w.astype(np.float64)
+        eigval = float(w64 @ y) / float(w64 @ w64)
+        num = float(np.linalg.norm(y - eigval * w64))
+        den = float(np.linalg.norm(y)) or 1.0
+        residuals.append(num / den)
+        w = quantize_unit(y, quantize_bits) if quantize_bits else (
+            (y / np.linalg.norm(y)).astype(np.float32)
+        )
+    return PowerIterationResult(
+        reports=reports,
+        eigvec=w,
+        eigval=eigval,
+        residuals=residuals,
+        churn_events=runner.churn_events,
+        plans_compiled=runner.plans_compiled,
+        cache_hits=runner.cache_hits,
+        total_waste=runner.total_waste,
+        executor_cache_size=runner.executor_cache_size,
+    )

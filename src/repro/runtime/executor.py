@@ -85,6 +85,10 @@ class BlockPlan:
     blk_include: (N, B) float32 — combine weight (1 = this copy is used)
     n_blocks:    (N,)  int32  — per-worker trip count
     block_rows:  rows per block (static)
+    blk_seg_t:   (N, B) int32 — the plan slot ``t`` each block came from
+                 (-1 on padding). Lets :func:`refresh_include` recompute the
+                 combine weights for a new straggler set without re-expanding
+                 the block lists (the elastic runner's per-step hot path).
     """
 
     blk_slot: np.ndarray
@@ -93,6 +97,7 @@ class BlockPlan:
     blk_include: np.ndarray
     n_blocks: np.ndarray
     block_rows: int
+    blk_seg_t: Optional[np.ndarray] = None
 
     @property
     def b_max(self) -> int:
@@ -137,7 +142,7 @@ def block_plan(
             for b in range(ln // block_rows):
                 off = st + b * block_rows
                 lists[w].append(
-                    (slot, off, g * plan.rows_per_tile + off, use)
+                    (slot, off, g * plan.rows_per_tile + off, use, t)
                 )
     cap = max((len(l) for l in lists), default=0)
     if b_max is not None:
@@ -152,15 +157,38 @@ def block_plan(
         blk_include=np.zeros((n, cap), np.float32),
         n_blocks=np.zeros((n,), np.int32),
         block_rows=block_rows,
+        blk_seg_t=np.full((n, cap), -1, np.int32),
     )
     for w in range(n):
-        for i, (slot, off, goff, use) in enumerate(lists[w]):
+        for i, (slot, off, goff, use, t) in enumerate(lists[w]):
             bp.blk_slot[w, i] = slot
             bp.blk_off[w, i] = off
             bp.blk_goff[w, i] = goff
             bp.blk_include[w, i] = use
+            bp.blk_seg_t[w, i] = t
         bp.n_blocks[w] = len(lists[w])
     return bp
+
+
+def refresh_include(
+    bp: BlockPlan, plan: CompiledPlan, stragglers: Sequence[int] = ()
+) -> np.ndarray:
+    """Recompute ``blk_include`` for a new per-step straggler set.
+
+    The block *geometry* (slots, offsets, trip counts) depends only on the
+    plan; the combine weights depend on which holders straggled this step.
+    Gathering the plan's (N, T_max) include mask through ``blk_seg_t`` turns
+    a straggler change into an O(N·B) array swap — no block re-expansion, no
+    recompilation. Returns a fresh (N, B) float32 array; ``bp`` is unchanged.
+    """
+    if bp.blk_seg_t is None:
+        raise ValueError("BlockPlan was built without blk_seg_t; rebuild via block_plan()")
+    inc = plan.include_mask(stragglers)                      # (N, T_max)
+    t = np.maximum(bp.blk_seg_t, 0)
+    rows = np.arange(bp.blk_slot.shape[0])[:, None]
+    out = inc[rows, t].astype(np.float32)
+    out[bp.blk_seg_t < 0] = 0.0
+    return out
 
 
 # ---------------------------------------------------------------------- #

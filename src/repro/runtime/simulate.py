@@ -1,7 +1,9 @@
 """Wall-clock simulation of USEC steps on heterogeneous elastic clusters.
 
-This container has one CPU device, so the *latency* claims of the paper are
-validated analytically, exactly as the paper's model defines them:
+The *latency* claims of the paper are validated analytically here, exactly
+as the paper's model defines them (the live execution path is
+:mod:`repro.runtime.elastic_runner`, whose benchmark cross-checks its
+measured step times against these predictions):
 
   worker n's finish time  t_n = mu[n] / s[n]        (Definition 3)
   step completion         = earliest time by which every segment has been

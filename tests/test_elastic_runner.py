@@ -1,0 +1,172 @@
+"""AvailabilityTrace edge cases + live elastic runner integration.
+
+The trace tests are pure NumPy (no jax); the runner tests execute on forced
+host devices in a subprocess (see ``conftest.run_with_devices``).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from repro.core import (
+    custom_placement,
+    cyclic_placement,
+    compile_plan,
+    solve_assignment,
+)
+from repro.core.elastic import (
+    AvailabilityTrace,
+    ElasticEvent,
+    MarkovChurnTrace,
+    scripted_trace,
+)
+from repro.core.placement import LostTileError
+from repro.runtime.simulate import simulate_step
+
+
+# ---------------------------------------------------------------------- #
+# AvailabilityTrace edge cases
+# ---------------------------------------------------------------------- #
+def test_all_machines_preempted_at_once():
+    tr = AvailabilityTrace(4)
+    ev = tr.apply(preempt=range(4))
+    assert ev.available == ()
+    assert ev.preempted == (0, 1, 2, 3)
+    # An empty availability set is a data-availability failure for every
+    # placement: restrict() must raise, not return an empty plan.
+    p = cyclic_placement(4, 4, 2)
+    with pytest.raises(LostTileError):
+        p.restrict(ev.available)
+
+
+def test_arrival_only_events():
+    tr = AvailabilityTrace(5, available0=[0, 1])
+    ev = tr.apply(arrive=[2, 3])
+    assert ev.preempted == ()
+    assert ev.arrived == (2, 3)
+    assert ev.available == (0, 1, 2, 3)
+    # arrivals of already-present or out-of-range machines are no-ops
+    ev2 = tr.apply(arrive=[0, 3, 4, 99])
+    assert ev2.arrived == (4,)
+    assert ev2.available == (0, 1, 2, 3, 4)
+    # a pure no-op event still advances the step counter deterministically
+    ev3 = tr.apply()
+    assert (ev3.preempted, ev3.arrived) == ((), ())
+    assert ev3.step == 3
+
+
+def test_single_survivor_membership():
+    # Machine 0 holds every tile (tile 0 exclusively): the system must keep
+    # running (and plan sensibly) when it is the only survivor.
+    p = custom_placement(4, [(0,)] + [(0, g % 3 + 1) for g in range(5)])
+    restricted = p.restrict([0])
+    assert all(h == (0,) for h in restricted.holders)
+    sol = solve_assignment(p, np.ones(4), available=[0], stragglers=0)
+    plan = compile_plan(p, sol, rows_per_tile=8, stragglers=0)
+    assert plan.n_valid[0] > 0 and not plan.n_valid[1:].any()
+    t = simulate_step(plan, np.ones(4))
+    # the lone survivor computes all 6 tiles' rows
+    assert t.completion_time == pytest.approx(6.0)
+    # ... but losing machine 0 is unrecoverable (tile 0 has no other holder)
+    with pytest.raises(LostTileError):
+        p.restrict([1, 2, 3])
+
+
+def test_markov_trace_deterministic_under_fixed_seed():
+    p = cyclic_placement(6, 6, 3)
+
+    def roll(seed):
+        tr = MarkovChurnTrace(6, p_preempt=0.3, p_arrive=0.5, min_available=2,
+                              seed=seed, placement=p, min_holders=2)
+        return [tr.step() for _ in range(40)]
+
+    a, b = roll(7), roll(7)
+    assert [e.available for e in a] == [e.available for e in b]
+    assert [(e.preempted, e.arrived) for e in a] == \
+        [(e.preempted, e.arrived) for e in b]
+    c = roll(8)
+    assert [e.available for e in a] != [e.available for e in c]
+    # the floor constraints held at every step
+    for e in a:
+        assert len(e.available) >= 2
+        assert p.restrict(e.available).replication >= 2
+
+
+def test_scripted_trace_yields_exact_script():
+    events = scripted_trace(4, {0: ((3,), ()), 2: ((), (3,))})
+    e0 = next(events)
+    assert (e0.preempted, e0.arrived, e0.available) == ((3,), (), (0, 1, 2))
+    e1 = next(events)
+    assert (e1.preempted, e1.arrived) == ((), ())
+    e2 = next(events)
+    assert (e2.arrived, e2.available) == ((3,), (0, 1, 2, 3))
+
+
+# ---------------------------------------------------------------------- #
+# Live runner (forced host devices, subprocess)
+# ---------------------------------------------------------------------- #
+def test_runner_exact_under_churn_without_recompilation():
+    out = run_with_devices("""
+import numpy as np
+from repro.core import cyclic_placement
+from repro.core.elastic import scripted_trace
+from repro.runtime import (ElasticRunner, RunnerConfig, SyntheticSpeedClock,
+                           run_power_iteration)
+
+rng = np.random.default_rng(0)
+dim = 4 * 96
+a = rng.integers(-3, 4, size=(dim, dim))
+x = (a + a.T + 30 * np.eye(dim, dtype=np.int64)).astype(np.float32)
+
+# S=1 on a 3-replicated placement: survives any single preemption AND one
+# straggler per step; verify="exact" bit-checks y == X @ w every step.
+p = cyclic_placement(4, 4, 3)
+runner = ElasticRunner(
+    x, p, RunnerConfig(block_rows=16, stragglers=1, verify="exact"),
+    clock=SyntheticSpeedClock([1000.0, 1300.0, 1800.0, 2400.0],
+                              jitter_sigma=0.05, seed=0),
+)
+script = {0: ((2,), ()), 1: ((), (2,)), 2: ((0,), ()), 4: ((), (0,))}
+picker = np.random.default_rng(1)
+res = run_power_iteration(
+    runner, 7, events=scripted_trace(4, script),
+    straggler_sets=lambda i, avail: (int(picker.choice(avail)),),
+    seed=0,
+)
+assert res.churn_events >= 3, res.churn_events
+assert res.executor_cache_size == 1, res.executor_cache_size
+assert res.plans_compiled >= 2       # membership changes forced fresh plans
+assert res.cache_hits >= 1           # ... and revisits reused them
+assert res.total_waste >= 0
+assert res.residuals[-1] < res.residuals[0]   # power iteration converging
+# cache-hit replans must be far cheaper than compile replans
+hit = [r.replan_s for r in res.reports if r.plan_cache_hit]
+miss = [r.replan_s for r in res.reports if r.replanned and not r.plan_cache_hit]
+assert hit and miss and min(miss) > max(hit)
+print("RUNNER-OK", res.plans_compiled, res.cache_hits, res.churn_events)
+""", n_devices=4)
+    assert "RUNNER-OK" in out
+
+
+def test_runner_rejects_stragglers_beyond_tolerance():
+    out = run_with_devices("""
+import numpy as np
+from repro.core import cyclic_placement
+from repro.runtime import ElasticRunner, RunnerConfig, quantize_unit
+
+rng = np.random.default_rng(0)
+dim = 4 * 32
+a = rng.integers(-2, 3, size=(dim, dim))
+x = (a + a.T + 10 * np.eye(dim, dtype=np.int64)).astype(np.float32)
+runner = ElasticRunner(x, cyclic_placement(4, 4, 2),
+                       RunnerConfig(block_rows=16, stragglers=0))
+w = quantize_unit(rng.normal(size=dim))
+y, rep = runner.step(w)                      # S=0, no stragglers: fine
+assert rep.jit_cache_size == 1
+try:
+    runner.step(w, stragglers=(0,))          # any straggler exceeds S=0
+except RuntimeError as e:
+    assert "exceeds" in str(e), e
+    print("TOLERANCE-OK")
+""", n_devices=4)
+    assert "TOLERANCE-OK" in out
