@@ -1,0 +1,155 @@
+"""ElasticEngine throughput: steps/sec per workload × backend.
+
+Drives the workload-agnostic front door (`repro.api.ElasticEngine`) through
+identical Markov churn on both backends and emits ``BENCH_engine.json``:
+
+- **simulate**: analytical steps/sec — each step is an n_draws-wide
+  completion-time distribution, so the derived figure also reports
+  scenario draws/sec (the batched engine's real unit of work);
+- **device**: live steps/sec on 4 forced host devices through the shard_map
+  executor (jit cache asserted == 1 per engine across churn).
+
+Workloads: power_iteration (matvec fast path), matmat (8-column blocked
+path), mapreduce (per-row squared norm + global sum).
+
+Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--steps 12]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.launch.hostdev import ensure_host_devices  # noqa: E402
+
+N_WORKERS = 4
+ensure_host_devices(N_WORKERS)
+
+import numpy as np  # noqa: E402
+
+DIM = 768
+COLS = 8
+BASE_SPEEDS = (1000.0, 1400.0, 1900.0, 2600.0)
+
+
+def _workloads(x, seed):
+    from repro.api import MapReduceRows, MatMat, MatVecPowerIteration
+
+    rng = np.random.default_rng(seed + 1)
+    w = (np.round(rng.normal(size=(DIM, COLS)) * 16) / 16).astype(np.float32)
+
+    def make_mapreduce():
+        import jax.numpy as jnp
+
+        return MapReduceRows(
+            row_fn=lambda xb, w2: jnp.sum(xb.astype(jnp.float32) ** 2,
+                                          axis=1, keepdims=True),
+            reduce_fn=lambda mapped: float(mapped.sum()),
+            out_cols=1,
+            ref_row_fn=lambda x64, _w: np.sum(x64 ** 2, axis=1,
+                                              keepdims=True),
+            name="mapreduce",
+        )
+
+    return {
+        "power_iteration": lambda: MatVecPowerIteration(seed=seed),
+        "matmat": lambda: MatMat(w),
+        "mapreduce": make_mapreduce,
+    }
+
+
+def _events(placement, s_tol, steps, seed):
+    from repro.core.elastic import MarkovChurnTrace
+
+    tr = MarkovChurnTrace(
+        N_WORKERS, p_preempt=0.2, p_arrive=0.6, min_available=1,
+        seed=seed, placement=placement, min_holders=1 + s_tol,
+    )
+    return [tr.step() for _ in range(steps)]
+
+
+def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
+        csv: bool = True):
+    from repro.api import ElasticEngine, EngineConfig, Policy
+    from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+    x = make_exact_matrix(DIM, seed)
+    s_tol = 1
+    policy = Policy(placement="cyclic", replication=2 + s_tol,
+                    stragglers=s_tol)
+    cfg = EngineConfig(block_rows=16, verify="exact", n_draws=256, seed=seed,
+                       jitter_sigma=0.2, initial_speeds=BASE_SPEEDS)
+
+    results = {}
+    for wname, make_wl in _workloads(x, seed).items():
+        results[wname] = {}
+        for backend in ("simulate", "device"):
+            engine = ElasticEngine(
+                make_wl(), policy, cfg, backend=backend,
+                n_machines=N_WORKERS,
+                clock=(SyntheticSpeedClock(list(BASE_SPEEDS),
+                                           jitter_sigma=0.05, seed=seed)
+                       if backend == "device" else None),
+            )
+            events = _events(engine.placement, s_tol, steps, seed)
+            t0 = time.perf_counter()
+            res = engine.run(
+                x if backend == "device" else None,
+                n_steps=steps, events=iter(events),
+            )
+            wall = time.perf_counter() - t0
+            if backend == "device" and res.executor_cache_size != 1:
+                raise AssertionError(
+                    f"{wname}: executor recompiled "
+                    f"({res.executor_cache_size} jit entries)")
+            entry = {
+                "steps": res.n_steps,
+                "wall_s": wall,
+                "steps_per_sec": res.n_steps / wall,
+                "plans_compiled": res.plans_compiled,
+                "cache_hits": res.cache_hits,
+                "total_waste_rows": res.total_waste,
+            }
+            if backend == "simulate":
+                entry["draws_per_sec"] = res.n_steps * cfg.n_draws / wall
+            else:
+                entry["jit_cache_size"] = res.executor_cache_size
+                entry["device_wall_s"] = sum(r.wall_s for r in res.reports)
+            results[wname][backend] = entry
+            if csv:
+                extra = (
+                    f"{entry.get('draws_per_sec', 0):.0f} draws/s"
+                    if backend == "simulate"
+                    else f"jit entries {entry['jit_cache_size']}"
+                )
+                print(f"engine_{wname}_{backend},"
+                      f"{1e6 * wall / max(res.n_steps, 1):.1f},"
+                      f"{entry['steps_per_sec']:.2f} steps/s over "
+                      f"{res.n_steps} steps; {extra}")
+
+    doc = {
+        "benchmark": "elastic_engine",
+        "n_workers": N_WORKERS,
+        "dim": DIM,
+        "matmat_cols": COLS,
+        "stragglers": s_tol,
+        "seed": seed,
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    if csv:
+        print(f"# wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    run(steps=args.steps, seed=args.seed, out=args.out)

@@ -41,15 +41,20 @@ def main(argv=None) -> None:
     print("# --- extension: transition-waste-averse re-planning (ref [2] metric) ---")
     bench_transition_waste.run()
     print("# --- live elastic runner: real execution under Markov churn ---")
-    _run_elastic_runner_subprocess(steps=24 if args.full else 12)
+    _run_devices_subprocess("bench_elastic_runner.py",
+                            steps=24 if args.full else 12)
+    print("# --- ElasticEngine: steps/sec per workload x backend ---")
+    _run_devices_subprocess("bench_engine.py",
+                            steps=16 if args.full else 8)
     print("# --- roofline (from the multi-pod dry-run artifacts) ---")
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s")
 
 
-def _run_elastic_runner_subprocess(steps: int) -> None:
-    """The runner needs 4 forced host devices; jax pins the device count at
-    first init, so it gets its own interpreter (same trick as the tests)."""
+def _run_devices_subprocess(script: str, steps: int) -> None:
+    """Device benches need 4 forced host devices; jax pins the device count
+    at first init, so each gets its own interpreter (same trick as the
+    tests)."""
     import os
     import subprocess
 
@@ -64,14 +69,14 @@ def _run_elastic_runner_subprocess(steps: int) -> None:
     else:
         env.pop("XLA_FLAGS", None)
     proc = subprocess.run(
-        [sys.executable, os.path.join(bench_dir, "bench_elastic_runner.py"),
+        [sys.executable, os.path.join(bench_dir, script),
          "--steps", str(steps)],
         capture_output=True, text=True, env=env,
         cwd=os.path.dirname(bench_dir),
     )
     sys.stdout.write(proc.stdout)
     if proc.returncode != 0:
-        sys.stdout.write(f"# elastic runner bench FAILED (rc={proc.returncode})\n")
+        sys.stdout.write(f"# {script} FAILED (rc={proc.returncode})\n")
         sys.stdout.write(proc.stderr[-2000:] + "\n")
 
 

@@ -1,5 +1,6 @@
 """The paper's §V application, executed LIVE: elastic power iteration on
-real (forced host) devices under preemption/arrival churn.
+real (forced host) devices under preemption/arrival churn — driven through
+the workload-agnostic front door, ``repro.api.ElasticEngine``.
 
 Four workers run distributed power iteration through the shard_map executor
 (Pallas ``usec_matvec`` on TPU, jnp reference on CPU). An availability trace
@@ -8,6 +9,12 @@ preempts and returns machines mid-run; the runner re-plans per membership
 (EWMA, Algorithm 1), and keeps every array padded to the full worker
 population — so membership changes swap plan arrays in place and the jitted
 step **never recompiles** (asserted via the jit cache size).
+
+The engine call below is the whole API: a ``MatVecPowerIteration`` workload,
+a ``Policy`` naming the placement and straggler tolerance, an
+``EngineConfig`` — flip ``backend="device"`` to ``"simulate"`` and the same
+configuration is evaluated analytically instead (see
+``examples/elastic_matmat.py`` for the two-backend version).
 
 The demo matrix is integer-valued and the iterate is kept on a 2^-8 grid,
 so every partial sum of ``y = X @ w`` is exactly representable in float32:
@@ -46,15 +53,14 @@ ensure_host_devices(N_WORKERS)
 
 import numpy as np  # noqa: E402
 
-from repro.core import cyclic_placement, man_placement  # noqa: E402
-from repro.core.elastic import MarkovChurnTrace, scripted_trace  # noqa: E402
-from repro.runtime import (  # noqa: E402
-    ElasticRunner,
-    RunnerConfig,
-    SyntheticSpeedClock,
-    make_exact_matrix,
-    run_power_iteration,
+from repro.api import (  # noqa: E402
+    ElasticEngine,
+    EngineConfig,
+    MatVecPowerIteration,
+    Policy,
 )
+from repro.core.elastic import MarkovChurnTrace, scripted_trace  # noqa: E402
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix  # noqa: E402
 
 DIM = 768          # divisible by every placement's tile count (4 and 6)
 # EC2-like heterogeneity, 4 workers, in rows/second (the clock's unit).
@@ -119,22 +125,21 @@ def main(argv=None):
             return (int(rng.choice(membership)),) if len(membership) > 1 else ()
 
         j = 2 + s_tol   # storage overhead scales with the tolerance
-        placement = (
-            cyclic_placement(N_WORKERS, N_WORKERS, j) if kind == "cyclic"
-            else man_placement(N_WORKERS, j)
-        )
-        runner = ElasticRunner(
-            x, placement,
-            RunnerConfig(block_rows=16, stragglers=s_tol, verify="exact"),
+        engine = ElasticEngine(
+            MatVecPowerIteration(seed=args.seed),
+            Policy(placement="cyclic" if kind == "cyclic" else "man",
+                   replication=j, stragglers=s_tol),
+            EngineConfig(block_rows=16, verify="exact"),
+            backend="device",
+            n_machines=N_WORKERS,
             clock=SyntheticSpeedClock(BASE_SPEEDS, jitter_sigma=0.03,
                                       seed=args.seed),
         )
-        res = run_power_iteration(
-            runner, args.steps,
-            events=events_for(args, placement, s_tol),
+        res = engine.run(
+            x, n_steps=args.steps,
+            events=events_for(args, engine.placement, s_tol),
             straggler_sets=one_straggler if s_tol > 0 else None,
-            seed=args.seed,
-        )
+        ).result
         results[(kind, s_tol)] = res
         steps_total += len(res.reports)
         assert res.executor_cache_size == 1, (

@@ -1,0 +1,41 @@
+"""The workload-agnostic front door to the elastic framework.
+
+One import surface for "run this computation elastically":
+
+    from repro.api import ElasticEngine, EngineConfig, Policy, MatMat
+
+    engine = ElasticEngine(MatMat(w), Policy(placement="man", replication=2,
+                                             stragglers=1),
+                           EngineConfig(n_draws=2000), backend="simulate",
+                           n_machines=4)
+    result = engine.run(events=my_trace, n_steps=32)
+
+Flip ``backend="device"`` and the SAME config, placement, availability
+trace and straggler policy execute live on devices through the shard_map
+executor instead of analytically. See :mod:`repro.api.engine` for the
+contract, :mod:`repro.api.workload` for the workload protocol and the three
+shipped workloads, and :mod:`repro.api.policy` for the scheduling policy
+object.
+"""
+
+from .engine import ElasticEngine, EngineConfig, EngineResult
+from .policy import Policy
+from .workload import (
+    MapReduceRows,
+    MatMat,
+    MatVec,
+    MatVecPowerIteration,
+    Workload,
+)
+
+__all__ = [
+    "ElasticEngine",
+    "EngineConfig",
+    "EngineResult",
+    "MapReduceRows",
+    "MatMat",
+    "MatVec",
+    "MatVecPowerIteration",
+    "Policy",
+    "Workload",
+]

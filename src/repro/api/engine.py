@@ -1,0 +1,433 @@
+"""ElasticEngine: one front door over the simulate and device stacks.
+
+The same run — a workload, a :class:`~repro.api.policy.Policy`, an
+:class:`EngineConfig`, an availability trace, a straggler policy — executes
+either way by flipping one argument:
+
+- ``backend="simulate"``: the analytical path. Plans are solved per
+  membership state (memoized), stacked, and every (step, draw) scenario is
+  evaluated in ONE :func:`repro.runtime.simulate.simulate_batch` pass.
+  Completion times are bitwise-identical to calling ``simulate_batch``
+  directly (workloads with ``cost_scale() != 1`` scale them afterwards).
+- ``backend="device"``: the live path. The generic
+  :class:`~repro.runtime.elastic_runner.ElasticRunner` executes every step
+  on real devices through the shard_map executor, with the workload's
+  ``tile_compute`` as the per-block kernel — churn swaps plan arrays in
+  place, the jitted step never recompiles, and per-step results verify
+  against a float64 host reference.
+
+The legacy entry points (``run_power_iteration``, ``sweep_churn``) are thin
+shims over this engine; see their modules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.elastic import ElasticEvent, transition_waste
+from repro.core.placement import Placement
+
+from .policy import Policy
+from .workload import Workload
+
+__all__ = ["ElasticEngine", "EngineConfig", "EngineResult"]
+
+_BACKENDS = ("simulate", "device")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Knobs shared by both backends (one config, two stacks).
+
+    Shared:
+      rows_per_tile: plan integerization granularity. 0 = derive — the
+        device backend uses ``q // G`` of the staged data; the simulate
+        backend defaults to 96 (the legacy ``SweepConfig`` default).
+      seed: base RNG seed (scenario draws, workload initialization).
+      initial_speeds: the planner's step-0 speed estimates (device) /
+        the plan speeds when ``plan_speeds`` is unset (simulate keeps its
+        own field for legacy-parity reasons).
+
+    Device backend:
+      block_rows: fixed-size executor work unit (must divide rows_per_tile).
+      speed_tolerance: memoized-plan reuse window under EWMA drift.
+      matmul_mode: kernel dispatch (None = Pallas on TPU, ref elsewhere).
+      verify / allclose_atol: per-step output check against float64 host
+        reference ("exact" | "allclose" | None).
+
+    Simulate backend:
+      n_draws: scenario draws per step.
+      speed_mean: mean of the exponential plan-speed draw when no explicit
+        speeds are given (the paper's Fig. 2 model).
+      jitter_sigma: lognormal jitter of realized speeds around plan speeds.
+      plan_speeds: explicit length-N planner speeds (a tuple, so the frozen
+        config keeps value semantics — comparable and hashable).
+    """
+
+    rows_per_tile: int = 0
+    seed: int = 0
+    initial_speeds: Optional[Tuple[float, ...]] = None
+    # device
+    block_rows: int = 16
+    speed_tolerance: float = 0.10
+    matmul_mode: Optional[str] = None
+    verify: Optional[str] = None
+    allclose_atol: float = 1e-3
+    # simulate
+    n_draws: int = 1000
+    speed_mean: float = 1.0
+    jitter_sigma: float = 0.3
+    plan_speeds: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        # Arrays in a frozen dataclass break __eq__/__hash__; normalize.
+        for name in ("plan_speeds", "initial_speeds"):
+            v = getattr(self, name)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(
+                    self, name,
+                    tuple(float(s) for s in np.asarray(v).ravel()))
+
+
+@dataclass
+class EngineResult:
+    """What one engine run produced — superset of both backends' outputs.
+
+    Device runs fill ``reports`` (per-step :class:`StepReport`) and
+    ``result`` (the workload's finalized object, e.g.
+    :class:`PowerIterationResult`); simulate runs fill ``steps`` (per-step
+    :class:`ChurnStep`) and ``completion_times`` ((T, B), +inf on
+    infeasible draws). ``total_waste`` is accounted by both.
+    """
+
+    backend: str
+    workload: str
+    n_steps: int
+    result: Any = None
+    reports: List = field(default_factory=list)
+    steps: List = field(default_factory=list)
+    completion_times: Optional[np.ndarray] = None
+    total_waste: int = 0
+    churn_events: int = 0
+    plans_compiled: int = 0
+    cache_hits: int = 0
+    executor_cache_size: int = -1
+    stragglers: int = 0
+
+
+class ElasticEngine:
+    """Workload-agnostic elastic execution, simulated or live.
+
+    Args:
+      workload: the computation (a :class:`~repro.api.workload.Workload`).
+      policy: every scheduling choice (placement, S, waste aversion, EWMA).
+      cfg: backend knobs.
+      backend: ``"simulate"`` or ``"device"``.
+      n_machines: machine population N (used to build the policy's
+        placement; not needed when ``placement`` is given).
+      placement: explicit placement (overrides ``policy.make_placement``).
+      clock: device backend's per-worker duration source (see
+        :class:`~repro.runtime.elastic_runner.HostSharedClock`).
+      mesh / worker_axis: device backend mesh override.
+    """
+
+    def __init__(
+        self,
+        workload: Workload,
+        policy: Policy = Policy(),
+        cfg: EngineConfig = EngineConfig(),
+        backend: str = "simulate",
+        n_machines: Optional[int] = None,
+        placement: Optional[Placement] = None,
+        clock=None,
+        mesh=None,
+        worker_axis: str = "data",
+    ):
+        if backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; choose from {_BACKENDS}")
+        if placement is None and n_machines is None:
+            raise ValueError("need n_machines (to build the policy's "
+                             "placement) or an explicit placement")
+        self.workload = workload
+        self.policy = policy
+        self.cfg = cfg
+        self.backend = backend
+        self.placement = (
+            placement if placement is not None
+            else policy.make_placement(int(n_machines))
+        )
+        self.clock = clock
+        self.mesh = mesh
+        self.worker_axis = worker_axis
+        self._runner = None  # built lazily (device) or adopted (from_runner)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_runner(cls, runner, workload: Workload) -> "ElasticEngine":
+        """Adopt an already-built :class:`ElasticRunner` (the legacy
+        ``run_power_iteration(runner, ...)`` calling convention).
+
+        The runner's executor was compiled with its construction-time
+        workload's ``tile_compute``; the adopted workload must be
+        executor-compatible (same block function and ``out_cols``) — the
+        power-iteration driver over a matvec runner is the canonical case.
+        """
+        eng = cls(
+            workload,
+            cfg=EngineConfig(
+                block_rows=runner.cfg.block_rows,
+                verify=runner.cfg.verify,
+                allclose_atol=runner.cfg.allclose_atol,
+            ),
+            backend="device",
+            placement=runner.placement,
+        )
+        runner.workload = workload
+        eng._runner = runner
+        return eng
+
+    @property
+    def runner(self):
+        """The device backend's live runner (None before the first run)."""
+        return self._runner
+
+    # ------------------------------------------------------------------ #
+    def run(
+        self,
+        data: Any = None,
+        n_steps: Optional[int] = None,
+        events: Optional[Iterable[ElasticEvent]] = None,
+        straggler_sets=None,
+        operand: Optional[np.ndarray] = None,
+    ) -> EngineResult:
+        """Drive one elastic run through ``events``.
+
+        Args:
+          data: the workload's input (staged by ``workload.stage``). The
+            simulate backend only needs shapes and may omit it.
+          n_steps: step count; None consumes ``events`` to exhaustion
+            (simulate) — so an unbounded generator (``scripted_trace`` /
+            ``MarkovChurnTrace`` run forever) MUST be capped with an
+            explicit ``n_steps``. The device backend always requires one.
+          events: iterable of :class:`ElasticEvent` (at most one per step);
+            None means a static full-membership run.
+          straggler_sets: per-step realized stragglers — an indexable of
+            index collections, or a callable ``(step, membership) ->
+            sequence`` evaluated after the step's event applies (device
+            backend only; the simulate backend draws stragglers from the
+            policy's environment model instead).
+          operand: step-0 operand override (workloads that own their
+            operand ignore it).
+        """
+        if self.backend == "device":
+            if n_steps is None:
+                raise ValueError("the device backend needs an explicit n_steps")
+            return self._run_device(data, int(n_steps), events,
+                                    straggler_sets, operand)
+        return self._run_simulate(n_steps, events)
+
+    # ------------------------------------------------------------------ #
+    # Device backend: live execution through the generic runner
+    # ------------------------------------------------------------------ #
+    def _build_runner(self, data):
+        from repro.runtime.elastic_runner import ElasticRunner, RunnerConfig
+
+        if data is None:
+            raise ValueError("the device backend needs data to stage")
+        x = self.workload.stage(data)
+        rcfg = RunnerConfig(
+            block_rows=self.cfg.block_rows,
+            stragglers=self.policy.base_stragglers(),
+            gamma=self.policy.gamma,
+            speed_tolerance=self.cfg.speed_tolerance,
+            matmul_mode=self.cfg.matmul_mode,
+            verify=self.cfg.verify,
+            allclose_atol=self.cfg.allclose_atol,
+        )
+        runner = ElasticRunner(
+            x, self.placement, rcfg,
+            initial_speeds=self.cfg.initial_speeds,
+            clock=self.clock,
+            mesh=self.mesh,
+            worker_axis=self.worker_axis,
+            workload=self.workload,
+            policy=self.policy,
+        )
+        if self.policy.auto_stragglers:
+            self.policy.resolve_stragglers(
+                runner.scheduler, runner.membership,
+                jitter_sigma=self.cfg.jitter_sigma, seed=self.cfg.seed,
+                commit=True,
+            )
+        return runner
+
+    def _run_device(self, data, n_steps, events, straggler_sets,
+                    operand) -> EngineResult:
+        if self._runner is None:
+            self._runner = self._build_runner(data)
+        elif data is not None:
+            # The runner staged its matrix (and compiled its executor) once;
+            # silently computing on the old data while accepting new data
+            # would bit-verify the wrong answer. One engine, one dataset.
+            raise ValueError(
+                "this engine already staged data on its first run; pass "
+                "data=None to continue on it, or build a new ElasticEngine "
+                "for a different matrix")
+        runner = self._runner
+        wl = self.workload
+        wl.reset()
+        ev_iter = iter(events) if events is not None else None
+        w = wl.init_operand(runner.rows_total, operand)
+
+        # Runner counters accumulate over its lifetime; EngineResult reports
+        # THIS run's share, so repeated run() calls don't double-count.
+        base = (runner.total_waste, runner.churn_events,
+                runner.plans_compiled, runner.cache_hits)
+        reports: List = []
+        last = None
+        for i in range(n_steps):
+            ev = next(ev_iter, None) if ev_iter is not None else None
+            if ev is not None:
+                runner.apply_event(ev)
+            if straggler_sets is None:
+                bad: Tuple[int, ...] = ()
+            elif callable(straggler_sets):
+                bad = tuple(straggler_sets(i, runner.membership))
+            else:
+                bad = tuple(straggler_sets[i])
+            y, rep = runner.step(w, stragglers=bad)
+            reports.append(rep)
+            last = wl.combine(y)
+            w = wl.consume(last, w)
+
+        return EngineResult(
+            backend="device",
+            workload=wl.name,
+            n_steps=len(reports),
+            result=wl.finalize(runner, reports, last, w),
+            reports=reports,
+            total_waste=runner.total_waste - base[0],
+            churn_events=runner.churn_events - base[1],
+            plans_compiled=runner.plans_compiled - base[2],
+            cache_hits=runner.cache_hits - base[3],
+            executor_cache_size=runner.executor_cache_size,
+            stragglers=runner.scheduler.stragglers,
+        )
+
+    # ------------------------------------------------------------------ #
+    # Simulate backend: the batched analytical path
+    # ------------------------------------------------------------------ #
+    def _run_simulate(self, n_steps, events) -> EngineResult:
+        from repro.core.assignment import solve_assignment
+        from repro.core.plan import CompiledPlan, compile_plan
+        from repro.runtime.scenarios import ChurnStep, draw_scenarios, summarize
+        from repro.runtime.simulate import build_plan_stack, simulate_batch
+
+        placement = self.placement
+        N = placement.n_machines
+        rows_per_tile = self.cfg.rows_per_tile or 96
+        rng = np.random.default_rng(self.cfg.seed)
+        if self.cfg.plan_speeds is not None:
+            s_plan = np.asarray(self.cfg.plan_speeds, dtype=np.float64)
+        elif self.cfg.initial_speeds is not None:
+            s_plan = np.asarray(self.cfg.initial_speeds, dtype=np.float64)
+        else:
+            s_plan = np.maximum(rng.exponential(self.cfg.speed_mean, N), 1e-3)
+
+        S = self.policy.base_stragglers()
+        if self.policy.auto_stragglers:
+            sched = self.policy.make_scheduler(placement, rows_per_tile, s_plan)
+            S = self.policy.resolve_stragglers(
+                sched, range(N), jitter_sigma=self.cfg.jitter_sigma,
+                seed=self.cfg.seed, commit=False)
+
+        if events is None:
+            if n_steps is None:
+                raise ValueError("need n_steps or events")
+            full = tuple(range(N))
+            events = (
+                ElasticEvent(step=i, preempted=(), arrived=(), available=full)
+                for i in range(n_steps)
+            )
+
+        # Memoized per availability state: (stack index, plan, c*, rows).
+        plan_cache: Dict[Tuple[int, ...], Tuple[int, CompiledPlan, float, Dict[int, set]]] = {}
+        plans: List[CompiledPlan] = []
+        steps_meta = []
+        prev_rows: Optional[Dict[int, set]] = None
+        prev_avail: Optional[Tuple[int, ...]] = None
+        total_waste = 0
+        churn = 0
+        for i, ev in enumerate(events):
+            if n_steps is not None and i >= n_steps:
+                break
+            # Same definition as the device backend (ElasticEvent.is_churn),
+            # so the two backends' EngineResults agree on a shared trace.
+            churn += int(ev.is_churn)
+            avail = tuple(sorted(ev.available))
+            if avail not in plan_cache:
+                sol = solve_assignment(placement, s_plan, available=avail,
+                                       stragglers=S, lexicographic=False)
+                plan = compile_plan(placement, sol,
+                                    rows_per_tile=rows_per_tile,
+                                    stragglers=S, speeds=s_plan)
+                rows = {n: plan.rows_of(n) for n in range(N)}
+                plan_cache[avail] = (len(plans), plan, sol.c_star, rows)
+                plans.append(plan)
+            idx, plan, c_star, rows = plan_cache[avail]
+            replanned = avail != prev_avail
+            waste = 0
+            if replanned and prev_rows is not None:
+                preempted = [n for n in range(N) if n not in set(avail)]
+                waste = transition_waste(prev_rows, rows, preempted)
+                total_waste += waste
+            prev_rows = rows
+            steps_meta.append((i, avail, idx, c_star, replanned, waste))
+            prev_avail = avail
+
+        B = self.cfg.n_draws
+        if not steps_meta:
+            return EngineResult(
+                backend="simulate", workload=self.workload.name, n_steps=0,
+                completion_times=np.zeros((0, B)), stragglers=S,
+            )
+
+        stack = build_plan_stack(plans)
+        T = len(steps_meta)
+        plan_index = np.repeat(
+            np.asarray([m[2] for m in steps_meta], dtype=np.int64), B)
+        realized, _ = draw_scenarios(
+            s_plan, T * B, self.cfg.jitter_sigma, rng, range(N))
+        timing = simulate_batch(stack, realized, plan_index=plan_index,
+                                on_infeasible="inf")
+        completion = timing.completion_times.reshape(T, B)
+        scale = self.workload.cost_scale()
+        if scale != 1.0:
+            # Modeled work per row relative to a matvec row (e.g. MatMat's
+            # column count); 1.0 keeps bitwise parity with simulate_batch.
+            # c* scales identically so time/c_star ratios stay unit-free.
+            completion = completion * scale
+
+        steps = [
+            ChurnStep(step=i, available=avail, c_star=c_star * scale,
+                      replanned=replanned, waste=waste,
+                      summary=summarize(completion[row]))
+            for row, (i, avail, _, c_star, replanned, waste)
+            in enumerate(steps_meta)
+        ]
+        return EngineResult(
+            backend="simulate",
+            workload=self.workload.name,
+            n_steps=T,
+            steps=steps,
+            completion_times=completion,
+            total_waste=total_waste,
+            churn_events=churn,
+            plans_compiled=len(plans),
+            cache_hits=T - len(plans),
+            stragglers=S,
+        )

@@ -22,6 +22,7 @@ runtime maps them to (EC2 VMs in the paper; data-parallel mesh slices here).
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Sequence, Tuple
 
@@ -178,10 +179,21 @@ _FACTORIES = {
 
 
 def make_placement(kind: str, n_machines: int, n_tiles: int, replication: int) -> Placement:
-    """Factory. For ``man`` the tile count is forced to C(N, J); callers that
-    need a specific G should re-tile their data to the placement's G."""
+    """Factory. For ``man`` the tile count is forced to C(N, J): a positive
+    ``n_tiles`` that disagrees with C(N, J) is an error (callers that need a
+    specific G should re-tile their data to the placement's G); pass 0 (or
+    the correct count) to accept the derived value."""
     if kind not in _FACTORIES:
         raise ValueError(f"unknown placement {kind!r}; choose from {sorted(_FACTORIES)}")
+    if kind == "man":
+        derived = math.comb(n_machines, replication)
+        if n_tiles and n_tiles != derived:
+            raise ValueError(
+                f"man placement has G = C(N={n_machines}, J={replication}) = "
+                f"{derived} tiles; requested n_tiles={n_tiles} would be "
+                f"silently ignored — pass 0 (or {derived}) to accept the "
+                f"derived count, or re-tile the data"
+            )
     p = _FACTORIES[kind](n_machines, n_tiles, replication)
     p.validate()
     return p

@@ -103,7 +103,7 @@ class USECScheduler:
         if self.homogeneous:
             # Baseline mode: ignore measured heterogeneity (the comparison
             # point in the paper's Fig. 4): plan as if all speeds are equal.
-            s_plan = np.where(s_hat > 0, 1.0, 1.0)
+            s_plan = np.ones_like(s_hat)
         else:
             s_plan = s_hat
 
@@ -113,14 +113,19 @@ class USECScheduler:
             and self._prev is not None
             and self._prev.available == avail_t
         ):
-            # Waste-averse path: is the old plan still near-optimal under
-            # the drifted speeds? (One LP solve to get the fresh optimum.)
-            fresh = solve_assignment(
+            # Waste-averse path: ONE cheap single-round solve (c* is exact
+            # with or without leveling) both checks near-optimality of the
+            # old plan and, on drift past eps, IS the adopted solution —
+            # the old code solved again lexicographically and discarded
+            # this one. Skipping the leveling on the adopt path is
+            # deliberate: balancing loads below the max moves rows for
+            # zero c* gain, the opposite of what waste aversion wants.
+            solution = solve_assignment(
                 self.placement, s_plan, available=available,
                 stragglers=self.stragglers, lexicographic=False,
             )
             old_c = self._prev.solution.time_of(s_plan)
-            if old_c <= (1.0 + self.waste_epsilon) * fresh.c_star + 1e-12:
+            if old_c <= (1.0 + self.waste_epsilon) * solution.c_star + 1e-12:
                 self._step += 1
                 reused = StepPlan(
                     step=self._step, available=avail_t, speeds=s_hat,
@@ -128,13 +133,10 @@ class USECScheduler:
                 )
                 self._prev = reused
                 return reused
+        else:
             solution = solve_assignment(
                 self.placement, s_plan, available=available,
                 stragglers=self.stragglers,
-            )
-        else:
-            solution = solve_assignment(
-                self.placement, s_plan, available=available, stragglers=self.stragglers
             )
         plan = compile_plan(
             self.placement,

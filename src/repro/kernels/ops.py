@@ -60,17 +60,69 @@ def usec_matvec(
     return y[:, 0] if squeeze else y
 
 
-def executor_matmul(mode: Optional[str] = None):
+def usec_matmat(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_m: int = 256,
+    block_k: int = 512,
+    block_n: int = 128,
+    mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """Y = X @ W for multi-column W (fp32 accumulate). x: (m, k); w: (k, c).
+
+    The blocked matmat path of the per-workload dispatch: W's columns are
+    processed in ``block_n`` chunks through the padded Pallas kernel, so a
+    wide right-hand side (the CEC papers' matrix-matrix workloads) never
+    materializes one giant kernel invocation while the matvec fast path
+    (c == 1) stays exactly :func:`usec_matvec`. A 1-d ``w`` degrades to the
+    matvec path unchanged.
+
+    mode: "pallas" | "interpret" | "ref" | None (auto: pallas on TPU, ref
+    elsewhere).
+    """
+    if w.ndim == 1:
+        return usec_matvec(x, w, block_m=block_m, block_k=block_k, mode=mode)
+    if mode is None:
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return ref.matvec_ref(x, w)
+    c = w.shape[1]
+    if c <= block_n:
+        return usec_matvec(x, w, block_m=block_m, block_k=block_k, mode=mode)
+    outs = [
+        usec_matvec(x, w[:, j: j + block_n],
+                    block_m=block_m, block_k=block_k, mode=mode)
+        for j in range(0, c, block_n)
+    ]
+    return jnp.concatenate(outs, axis=1)
+
+
+_EXECUTOR_KERNELS = {
+    "matvec": usec_matvec,
+    "matmat": usec_matmat,
+}
+
+
+def executor_matmul(mode: Optional[str] = None, workload: str = "matvec"):
     """Block-level matmul for the shard_map executors, with kernel dispatch.
 
     ``repro.runtime.executor.make_matvec_executor`` takes a ``matmul(xb, w2)``
     callable applied per (block_rows, k) block inside the per-worker
-    ``fori_loop``. This returns one routed through :func:`usec_matvec`, so the
-    executor runs the Pallas kernel on TPU, the jnp reference on CPU, and the
-    interpreted kernel when tests ask for exact kernel semantics — the same
-    dispatch policy as every other op in this module.
+    ``fori_loop``. This returns one routed through the per-workload kernel
+    table (``workload="matvec"`` -> :func:`usec_matvec`, ``"matmat"`` ->
+    the blocked :func:`usec_matmat`), so the executor runs the Pallas kernel
+    on TPU, the jnp reference on CPU, and the interpreted kernel when tests
+    ask for exact kernel semantics — the same dispatch policy as every other
+    op in this module.
     """
-    return functools.partial(usec_matvec, mode=mode)
+    try:
+        kernel = _EXECUTOR_KERNELS[workload]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor workload {workload!r}; "
+            f"choose from {sorted(_EXECUTOR_KERNELS)}"
+        ) from None
+    return functools.partial(kernel, mode=mode)
 
 
 def flash_attention(

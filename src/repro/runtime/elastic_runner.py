@@ -1,4 +1,4 @@
-"""Live elastic execution: churn-driven power iteration on real devices.
+"""Live elastic execution: the generic churn-driven device backend.
 
 Everything below PR 1 *simulated* completion times; this module actually
 executes a placement's plan across membership changes. It closes the loop the
@@ -11,9 +11,18 @@ feeds :class:`~repro.core.elastic.ElasticEvent`\\ s into a master that
    membership** and invalidated only when the speed estimate drifts past a
    tolerance, so revisited availability states reuse their plan in O(N),
 3. executes the step through the shard_map executor
-   (:func:`repro.runtime.executor.make_matvec_executor`) with the Pallas
-   ``usec_matvec`` kernel on TPU (jnp reference on CPU — the dispatch of
-   :func:`repro.kernels.ops.executor_matmul`).
+   (:func:`repro.runtime.executor.make_matvec_executor`) with the
+   *workload's* per-block compute as the kernel — the Pallas ``usec_matvec``
+   kernel on TPU for the matvec workloads (jnp reference on CPU — the
+   dispatch of :func:`repro.kernels.ops.executor_matmul`), the blocked
+   matmat path for :class:`~repro.api.workload.MatMat`, or any row-wise map.
+
+The runner is workload-agnostic: the computation arrives as a
+:class:`~repro.api.workload.Workload` (defaulting to plain matvec) and the
+scheduler is configured through one :class:`~repro.api.policy.Policy`. The
+preferred entry point is :class:`repro.api.ElasticEngine` with
+``backend="device"``; :func:`run_power_iteration` below survives as a thin
+deprecation shim over it.
 
 The static-shape contract: every array is padded to the **max-N membership**
 (the full machine population). A preempted machine is a worker slot with
@@ -42,7 +51,7 @@ import numpy as np
 
 from repro.core.elastic import ElasticEvent, transition_waste
 from repro.core.placement import Placement
-from repro.core.scheduler import StepPlan, USECScheduler
+from repro.core.scheduler import StepPlan
 
 __all__ = [
     "ElasticRunner",
@@ -66,15 +75,17 @@ class RunnerConfig:
 
     block_rows: fixed-size work unit of the executor; must divide
       rows_per_tile (plans are compiled with ``row_align == block_rows``).
-    stragglers: straggler tolerance S baked into every plan.
-    gamma: EWMA mixing factor for the speed estimator.
+    stragglers: straggler tolerance S baked into every plan (superseded by
+      an explicit ``policy=`` on the runner).
+    gamma: EWMA mixing factor for the speed estimator (ditto).
     speed_tolerance: a memoized plan for a revisited membership is reused
       while ``max_n |s_hat[n]/s_plan[n] - 1| <= speed_tolerance`` over the
       available machines; past that the drift forces a fresh solve.
-    matmul_mode: kernel dispatch for :func:`repro.kernels.ops.executor_matmul`
+    matmul_mode: kernel dispatch handed to the workload's ``executor_fn``
       (None = Pallas on TPU, jnp reference elsewhere).
     verify: per-step output check against a float64 host reference —
       ``"exact"`` (bitwise; integer-valued data), ``"allclose"``, or None.
+      The check itself is the workload's ``verify``.
     allclose_atol: tolerance of the ``"allclose"`` mode.
     """
 
@@ -187,12 +198,17 @@ class _CacheEntry:
 
 
 class ElasticRunner:
-    """Executes USEC matvec steps across an elastic availability trace.
+    """Executes one workload's steps across an elastic availability trace.
 
     Build once per (matrix, placement); then per step optionally apply an
     :class:`ElasticEvent` and call :meth:`step`. All jax state (mesh,
     executor, staged matrix) is constructed in ``__init__`` and never
     rebuilt.
+
+    ``workload`` supplies the per-block compute and the verification
+    reference (default: plain matvec, the legacy behavior); ``policy``
+    configures the scheduler (default: a Policy carrying the cfg's
+    ``stragglers``/``gamma``, preserving the legacy kwargs).
     """
 
     def __init__(
@@ -204,15 +220,26 @@ class ElasticRunner:
         clock=None,
         mesh=None,
         worker_axis: str = "data",
+        workload=None,
+        policy=None,
     ):
         import jax
         import jax.numpy as jnp
 
-        from repro.kernels.ops import executor_matmul
         from repro.launch.mesh import make_worker_mesh
 
         from .executor import make_matvec_executor, stage_matrix
 
+        if workload is None:
+            from repro.api.workload import MatVec
+
+            workload = MatVec()
+        if policy is None:
+            from repro.api.policy import Policy
+
+            policy = Policy(stragglers=cfg.stragglers, gamma=cfg.gamma)
+        self.workload = workload
+        self.policy = policy
         self.cfg = cfg
         self.placement = placement
         N, G = placement.n_machines, placement.n_tiles
@@ -226,15 +253,13 @@ class ElasticRunner:
                 f"{self.rows_per_tile}"
             )
         self.rows_total = q
-        self.scheduler = USECScheduler(
+        self.scheduler = policy.make_scheduler(
             placement,
             rows_per_tile=self.rows_per_tile,
             initial_speeds=(
                 np.ones(N) if initial_speeds is None
                 else np.asarray(initial_speeds, dtype=np.float64)
             ),
-            stragglers=cfg.stragglers,
-            gamma=cfg.gamma,
             row_align=cfg.block_rows,
         )
         self.clock = clock if clock is not None else HostSharedClock()
@@ -250,7 +275,8 @@ class ElasticRunner:
         self.worker_axis = worker_axis
         self._executor = make_matvec_executor(
             self.mesh, worker_axis, rows_total=q, block_rows=cfg.block_rows,
-            matmul=executor_matmul(cfg.matmul_mode),
+            matmul=workload.executor_fn(cfg.matmul_mode),
+            out_cols=workload.out_cols,
         )
         self._staged_dev = jnp.asarray(self._staged.staged)
         self._jnp = jnp
@@ -426,21 +452,10 @@ class ElasticRunner:
         return y, report
 
     def _verify(self, y: np.ndarray, w: np.ndarray) -> None:
-        ref = self._x64 @ np.asarray(w, dtype=np.float64)
-        if self.cfg.verify == "exact":
-            if not np.array_equal(y.astype(np.float64), ref):
-                bad = int(np.argmax(y.astype(np.float64) != ref))
-                raise AssertionError(
-                    f"y != X @ w (exact): first mismatch at row {bad}: "
-                    f"{y[bad]!r} vs {ref[bad]!r}"
-                )
-        elif self.cfg.verify == "allclose":
-            err = float(np.max(np.abs(y - ref)))
-            scale = float(np.max(np.abs(ref))) or 1.0
-            if err > self.cfg.allclose_atol * scale:
-                raise AssertionError(f"y != X @ w: max abs err {err} (scale {scale})")
-        else:
-            raise ValueError(f"unknown verify mode {self.cfg.verify!r}")
+        # The reference is the workload's business: X @ w for matvec,
+        # X @ W for matmat, the NumPy row map for map-reduce.
+        self.workload.verify(y, w, self._x64, mode=self.cfg.verify,
+                             atol=self.cfg.allclose_atol)
 
 
 # ---------------------------------------------------------------------- #
@@ -511,7 +526,13 @@ def run_power_iteration(
     quantize_bits: Optional[int] = 8,
     seed: int = 0,
 ) -> PowerIterationResult:
-    """Drive ``n_steps`` of elastic power iteration through a churn trace.
+    """Deprecated shim: drive elastic power iteration through a churn trace.
+
+    The loop now lives in :class:`repro.api.workload.MatVecPowerIteration`
+    driven by :class:`repro.api.ElasticEngine` (``backend="device"``); this
+    wrapper adopts the given runner and delegates, returning the same
+    :class:`PowerIterationResult` bit for bit. New code should call the
+    engine directly — it runs the same config on either backend.
 
     ``events`` yields at most one :class:`ElasticEvent` per step (e.g.
     :func:`repro.core.elastic.scripted_trace` or a stepped
@@ -523,46 +544,17 @@ def run_power_iteration(
     (see :func:`quantize_unit`), which is what makes the runner's exact
     verification meaningful.
     """
-    rng = np.random.default_rng(seed)
-    ev_iter = iter(events) if events is not None else None
-    dim = runner.rows_total
-    w = np.asarray(w0, dtype=np.float32) if w0 is not None else (
-        rng.normal(size=dim).astype(np.float32)
-    )
-    if quantize_bits:
-        w = quantize_unit(w, quantize_bits)
+    import warnings
 
-    reports: List[StepReport] = []
-    residuals: List[float] = []
-    eigval = 0.0
-    for i in range(n_steps):
-        ev = next(ev_iter, None) if ev_iter is not None else None
-        if ev is not None:
-            runner.apply_event(ev)
-        if straggler_sets is None:
-            bad: Tuple[int, ...] = ()
-        elif callable(straggler_sets):
-            bad = tuple(straggler_sets(i, runner.membership))
-        else:
-            bad = tuple(straggler_sets[i])
-        y, rep = runner.step(w, stragglers=bad)
-        reports.append(rep)
-        w64 = w.astype(np.float64)
-        eigval = float(w64 @ y) / float(w64 @ w64)
-        num = float(np.linalg.norm(y - eigval * w64))
-        den = float(np.linalg.norm(y)) or 1.0
-        residuals.append(num / den)
-        w = quantize_unit(y, quantize_bits) if quantize_bits else (
-            (y / np.linalg.norm(y)).astype(np.float32)
-        )
-    return PowerIterationResult(
-        reports=reports,
-        eigvec=w,
-        eigval=eigval,
-        residuals=residuals,
-        churn_events=runner.churn_events,
-        plans_compiled=runner.plans_compiled,
-        cache_hits=runner.cache_hits,
-        total_waste=runner.total_waste,
-        executor_cache_size=runner.executor_cache_size,
+    from repro.api import ElasticEngine, MatVecPowerIteration
+
+    warnings.warn(
+        "run_power_iteration is deprecated; use repro.api.ElasticEngine("
+        "MatVecPowerIteration(...), ..., backend='device')",
+        DeprecationWarning, stacklevel=2,
     )
+    workload = MatVecPowerIteration(w0=w0, quantize_bits=quantize_bits,
+                                    seed=seed)
+    res = ElasticEngine.from_runner(runner, workload).run(
+        n_steps=n_steps, events=events, straggler_sets=straggler_sets)
+    return res.result

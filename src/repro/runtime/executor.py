@@ -200,16 +200,22 @@ def make_matvec_executor(
     rows_total: int,
     block_rows: int,
     matmul: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = None,
+    out_cols: Optional[int] = None,
 ) -> Callable:
-    """Build the jitted USEC matvec step ``y = X w`` for a fixed geometry.
+    """Build the jitted USEC row-sharded step for a fixed geometry.
 
     Returns ``step(staged, blk_slot, blk_off, blk_goff, blk_include,
     n_blocks, w) -> y`` where array shapes follow :class:`StagedMatrix` /
     :class:`BlockPlan` and ``w`` is (r,) or (r, c). The output is (rows_total,
     [c]) float32, fully reduced.
 
-    ``matmul`` defaults to a fp32-accumulating dot; on TPU pass
-    ``repro.kernels.ops.usec_matvec`` to run the Pallas kernel per block.
+    ``matmul`` is the per-block compute ``f(xb, w2) -> (block_rows, cols)``;
+    it defaults to a fp32-accumulating dot (``y = X w`` semantics, the USEC
+    matvec). On TPU pass ``repro.kernels.ops.usec_matvec`` to run the Pallas
+    kernel per block — or any other row-wise map (a workload's
+    ``tile_compute``), in which case ``out_cols`` pins the static per-row
+    output width when it differs from the operand's column count (the
+    map-reduce workloads of :mod:`repro.api`).
     """
     mm = matmul or (
         lambda xb, wb: jnp.dot(
@@ -224,7 +230,7 @@ def make_matvec_executor(
         blk_slot, blk_off = blk_slot[0], blk_off[0]
         blk_goff, blk_include = blk_goff[0], blk_include[0]
         w2 = w if w.ndim == 2 else w[:, None]
-        cols = w2.shape[1]
+        cols = w2.shape[1] if out_cols is None else out_cols
         y0 = jnp.zeros((rows_total, cols), jnp.float32)
 
         def step(i, y):
@@ -238,7 +244,9 @@ def make_matvec_executor(
 
         y = jax.lax.fori_loop(0, n_blocks[0], step, y0)
         y = jax.lax.psum(y, worker_axis)
-        return y if w.ndim == 2 else y[:, 0]
+        # A 1-d operand squeezes back to a vector only when the output width
+        # follows the operand; an explicit out_cols keeps its matrix shape.
+        return y if (w.ndim == 2 or out_cols is not None) else y[:, 0]
 
     sharded = shard_map(
         body,

@@ -9,7 +9,12 @@ imagine" goal asks for. It stays entirely on the vectorized path:
 - a *churn* sweep walks an availability trace, re-plans per membership state
   (memoized — revisited states reuse their compiled plan), stacks the plans,
   and evaluates all (step, draw) pairs in one batched call, alongside
-  per-transition waste accounting.
+  per-transition waste accounting. The walk itself now lives in the
+  simulate backend of :class:`repro.api.ElasticEngine`;
+  :func:`sweep_churn` is a bit-exact shim over it.
+
+Sweeps carry a *workload* axis: any :class:`repro.api.Workload` scales the
+analytical times by its per-row cost relative to matvec (``cost_scale()``).
 
 Everything returns plain arrays/dataclasses so benchmarks and schedulers can
 consume distributions directly (the scheduler's straggler-tolerance lookahead
@@ -24,17 +29,11 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.elastic import transition_waste
 from repro.core.placement import Placement
 from repro.core.assignment import solve_assignment
-from repro.core.plan import CompiledPlan, compile_plan
+from repro.core.plan import compile_plan
 
-from .simulate import (
-    PlanStack,
-    StragglerProcess,
-    build_plan_stack,
-    simulate_batch,
-)
+from .simulate import StragglerProcess, simulate_batch
 
 
 # ---------------------------------------------------------------------- #
@@ -98,6 +97,7 @@ class ScenarioResult:
     n_straggled: np.ndarray          # (B,)
     c_star: float                    # planner's optimum under plan speeds
     summary: Dict[str, float] = field(default_factory=dict)
+    workload: str = "matvec"         # workload axis (cost-scaled times)
 
     def __post_init__(self):
         if not self.summary:
@@ -169,8 +169,14 @@ def sweep_cell(
     n_stragglers: int,
     cfg: SweepConfig,
     rng: Optional[np.random.Generator] = None,
+    workload=None,
 ) -> ScenarioResult:
-    """Plan one (placement, S) cell and evaluate ``cfg.n_draws`` scenarios."""
+    """Plan one (placement, S) cell and evaluate ``cfg.n_draws`` scenarios.
+
+    ``workload`` (a :class:`repro.api.Workload`) scales the analytical
+    completion times by its per-row cost relative to matvec
+    (``cost_scale()``); None keeps the raw matvec times bit-for-bit.
+    """
     rng = rng or np.random.default_rng(cfg.seed)
     N = placement.n_machines
     if cfg.plan_speeds is not None:
@@ -187,15 +193,24 @@ def sweep_cell(
         n_stragglers=n_stragglers, straggler_mode=straggler_mode)
     timing = simulate_batch(plan, realized, dropped=drop,
                             on_infeasible="inf")
+    times = timing.completion_times
+    c_star = sol.c_star
+    scale = 1.0 if workload is None else float(workload.cost_scale())
+    if scale != 1.0:
+        # Times and the planner's optimum scale together, so overhead
+        # ratios (time / c_star) stay unit-free.
+        times = times * scale
+        c_star = c_star * scale
     return ScenarioResult(
         name=name,
         placement=placement.name,
         tolerance=tolerance,
         straggler_mode=straggler_mode,
         n_stragglers=n_stragglers,
-        completion_times=timing.completion_times,
+        completion_times=times,
         n_straggled=timing.n_straggled,
-        c_star=sol.c_star,
+        c_star=c_star,
+        workload="matvec" if workload is None else workload.name,
     )
 
 
@@ -204,26 +219,38 @@ def sweep_grid(
     tolerances: Sequence[int] = (0, 1),
     straggler_policies: Sequence[Tuple[str, int]] = (("none", 0),),
     cfg: SweepConfig = SweepConfig(),
+    workloads: Optional[Mapping[str, "object"]] = None,
 ) -> List[ScenarioResult]:
-    """Cross placements × tolerances × straggler policies.
+    """Cross workloads × placements × tolerances × straggler policies.
 
     ``straggler_policies`` are (mode, count) pairs, e.g. ("uniform", 1) or
     ("slowest", 2). Cells whose placement cannot tolerate S stragglers
     (replication < 1+S) are skipped. Each cell's RNG stream is derived from
     (cfg.seed, cell name) alone, so a cell's distribution is reproducible
     regardless of which other cells are in the grid.
+
+    ``workloads`` adds the workload axis: a mapping of label ->
+    :class:`repro.api.Workload`; each cell is crossed with every workload
+    and named ``{wname}/{pname}/S={S}/{mode}x{count}``. None (the default)
+    keeps the legacy matvec-only grid with unprefixed cell names — and the
+    exact legacy RNG streams.
     """
+    axis = {None: None} if workloads is None else dict(workloads)
     out: List[ScenarioResult] = []
-    for pname, placement in sorted(placements.items()):
-        for S in tolerances:
-            if placement.replication < 1 + S:
-                continue
-            for mode, count in straggler_policies:
-                name = f"{pname}/S={S}/{mode}x{count}"
-                rng = np.random.default_rng(np.random.SeedSequence(
-                    [cfg.seed, zlib.crc32(name.encode("utf-8"))]))
-                out.append(sweep_cell(
-                    name, placement, S, mode, count, cfg, rng))
+    for wname, wl in sorted(axis.items(), key=lambda kv: kv[0] or ""):
+        for pname, placement in sorted(placements.items()):
+            for S in tolerances:
+                if placement.replication < 1 + S:
+                    continue
+                for mode, count in straggler_policies:
+                    name = f"{pname}/S={S}/{mode}x{count}"
+                    if wname is not None:
+                        name = f"{wname}/{name}"
+                    rng = np.random.default_rng(np.random.SeedSequence(
+                        [cfg.seed, zlib.crc32(name.encode("utf-8"))]))
+                    out.append(sweep_cell(
+                        name, placement, S, mode, count, cfg, rng,
+                        workload=wl))
     return out
 
 
@@ -236,8 +263,13 @@ def sweep_churn(
     cfg: SweepConfig = SweepConfig(),
     tolerance: int = 0,
     n_steps: Optional[int] = None,
+    workload=None,
 ) -> ChurnSweepResult:
-    """Walk an availability trace and batch-evaluate every step.
+    """Deprecated shim: walk an availability trace and batch-evaluate every
+    step. The churn walk now lives in
+    :meth:`repro.api.ElasticEngine.run` (``backend="simulate"``); this
+    wrapper translates the legacy (SweepConfig, tolerance) calling
+    convention and returns the same :class:`ChurnSweepResult` bit for bit.
 
     Args:
       placement: the storage placement (fixed across the run, as in USEC).
@@ -247,71 +279,36 @@ def sweep_churn(
       cfg: sweep knobs (draws per step, jitter, planner speeds).
       tolerance: straggler tolerance S of every plan.
       n_steps: cap when ``events`` is an infinite generator.
+      workload: optional :class:`repro.api.Workload` whose ``cost_scale()``
+        scales the analytical times (None = matvec, scale 1).
 
     Plans are memoized per availability set — elastic traces revisit states,
     and the planner is deterministic given (availability, plan speeds). All
     (step, draw) scenarios are evaluated by ONE `simulate_batch` call on the
     stacked plans.
     """
-    rng = np.random.default_rng(cfg.seed)
-    N = placement.n_machines
-    s_plan = (
-        np.asarray(cfg.plan_speeds, dtype=np.float64)
-        if cfg.plan_speeds is not None
-        else np.maximum(rng.exponential(cfg.speed_mean, N), 1e-3)
+    import warnings
+
+    from repro.api import ElasticEngine, EngineConfig, MatVec, Policy
+
+    warnings.warn(
+        "sweep_churn is deprecated; use repro.api.ElasticEngine("
+        "..., backend='simulate').run(events=...)",
+        DeprecationWarning, stacklevel=2,
     )
-
-    # Memoized per availability state: (stack index, plan, c*, rows dict).
-    # Elastic traces revisit states; the rows dict is cached too so waste
-    # accounting on revisits costs O(1), not O(N * rows).
-    plan_cache: Dict[Tuple[int, ...], Tuple[int, CompiledPlan, float, Dict[int, set]]] = {}
-    plans: List[CompiledPlan] = []
-    steps_meta = []
-    prev_rows: Optional[Dict[int, set]] = None
-    prev_avail: Optional[Tuple[int, ...]] = None
-    total_waste = 0
-
-    for i, ev in enumerate(events):
-        if n_steps is not None and i >= n_steps:
-            break
-        avail = tuple(sorted(ev.available))
-        if avail not in plan_cache:
-            sol = solve_assignment(placement, s_plan, available=avail,
-                                   stragglers=tolerance, lexicographic=False)
-            plan = compile_plan(placement, sol,
-                                rows_per_tile=cfg.rows_per_tile,
-                                stragglers=tolerance, speeds=s_plan)
-            rows = {n: plan.rows_of(n) for n in range(N)}
-            plan_cache[avail] = (len(plans), plan, sol.c_star, rows)
-            plans.append(plan)
-        idx, plan, c_star, rows = plan_cache[avail]
-        replanned = avail != prev_avail
-        waste = 0
-        if replanned and prev_rows is not None:
-            preempted = [n for n in range(N) if n not in set(avail)]
-            waste = transition_waste(prev_rows, rows, preempted)
-            total_waste += waste
-        prev_rows = rows
-        steps_meta.append((i, avail, idx, c_star, replanned, waste))
-        prev_avail = avail
-
-    if not steps_meta:
-        return ChurnSweepResult([], np.zeros((0, cfg.n_draws)), 0)
-
-    stack = build_plan_stack(plans)
-    T, B = len(steps_meta), cfg.n_draws
-    plan_index = np.repeat(
-        np.asarray([m[2] for m in steps_meta], dtype=np.int64), B)
-    realized, _ = draw_scenarios(
-        s_plan, T * B, cfg.jitter_sigma, rng, range(N))
-    timing = simulate_batch(stack, realized, plan_index=plan_index,
-                            on_infeasible="inf")
-    completion = timing.completion_times.reshape(T, B)
-
-    steps = [
-        ChurnStep(step=i, available=avail, c_star=c_star,
-                  replanned=replanned, waste=waste,
-                  summary=summarize(completion[row]))
-        for row, (i, avail, _, c_star, replanned, waste) in enumerate(steps_meta)
-    ]
-    return ChurnSweepResult(steps, completion, total_waste)
+    engine = ElasticEngine(
+        workload if workload is not None else MatVec(),
+        Policy(stragglers=int(tolerance)),
+        EngineConfig(
+            rows_per_tile=cfg.rows_per_tile,
+            seed=cfg.seed,
+            n_draws=cfg.n_draws,
+            speed_mean=cfg.speed_mean,
+            jitter_sigma=cfg.jitter_sigma,
+            plan_speeds=cfg.plan_speeds,
+        ),
+        backend="simulate",
+        placement=placement,
+    )
+    res = engine.run(events=events, n_steps=n_steps)
+    return ChurnSweepResult(res.steps, res.completion_times, res.total_waste)

@@ -1,0 +1,376 @@
+"""Parity and correctness of the workload-agnostic `repro.api` front door.
+
+The engine is a *redesign*, not a rewrite — so almost everything here is
+differential: the simulate backend must be bitwise-equal to calling
+`simulate_batch` by hand and to the legacy churn walk; the device backend
+must reproduce the legacy `run_power_iteration` output bit for bit; the new
+workloads must stay exact under churn with forced stragglers.
+
+Host-side tests are pure NumPy; device-backend tests execute on forced host
+devices in a subprocess (see ``conftest.run_with_devices``).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from repro.api import (
+    ElasticEngine,
+    EngineConfig,
+    MapReduceRows,
+    MatMat,
+    MatVec,
+    Policy,
+)
+from repro.core import (
+    USECScheduler,
+    cyclic_placement,
+    make_placement,
+    solve_assignment,
+)
+from repro.core.elastic import MarkovChurnTrace
+from repro.core.plan import compile_plan
+from repro.runtime.scenarios import SweepConfig, draw_scenarios, sweep_churn, sweep_grid
+from repro.runtime.simulate import build_plan_stack, simulate_batch
+
+
+# ---------------------------------------------------------------------- #
+# Simulate backend: bitwise parity with the hand-rolled analytical path
+# ---------------------------------------------------------------------- #
+def test_simulate_backend_bitwise_matches_simulate_batch_static():
+    p = cyclic_placement(5, 5, 2)
+    cfg = EngineConfig(rows_per_tile=96, seed=3, n_draws=200, jitter_sigma=0.3)
+    res = ElasticEngine(MatVec(), Policy(stragglers=0), cfg,
+                        backend="simulate", placement=p).run(n_steps=4)
+    # Replicate the engine's RNG stream by hand against raw simulate_batch.
+    rng = np.random.default_rng(3)
+    s_plan = np.maximum(rng.exponential(1.0, 5), 1e-3)
+    sol = solve_assignment(p, s_plan, available=tuple(range(5)),
+                           stragglers=0, lexicographic=False)
+    plan = compile_plan(p, sol, rows_per_tile=96, stragglers=0, speeds=s_plan)
+    realized, _ = draw_scenarios(s_plan, 4 * 200, 0.3, rng, range(5))
+    expect = simulate_batch(plan, realized, on_infeasible="inf") \
+        .completion_times.reshape(4, 200)
+    assert np.array_equal(res.completion_times, expect)
+    assert res.plans_compiled == 1 and res.cache_hits == 3
+
+
+def test_simulate_backend_bitwise_matches_legacy_churn_walk():
+    """Engine churn walk vs an independent re-implementation of the
+    pre-redesign sweep_churn loop (memoized plans, stacked batch eval)."""
+    p = cyclic_placement(6, 6, 3)
+    trace = MarkovChurnTrace(6, p_preempt=0.25, p_arrive=0.6, seed=2,
+                             placement=p, min_holders=2)
+    events = [trace.step() for _ in range(20)]
+    cfg = EngineConfig(rows_per_tile=96, seed=4, n_draws=64, jitter_sigma=0.3)
+    res = ElasticEngine(MatVec(), Policy(stragglers=1), cfg,
+                        backend="simulate", placement=p).run(events=iter(events))
+
+    rng = np.random.default_rng(4)
+    s_plan = np.maximum(rng.exponential(1.0, 6), 1e-3)
+    cache, plans, idxs = {}, [], []
+    for ev in events:
+        avail = tuple(sorted(ev.available))
+        if avail not in cache:
+            sol = solve_assignment(p, s_plan, available=avail, stragglers=1,
+                                   lexicographic=False)
+            cache[avail] = len(plans)
+            plans.append(compile_plan(p, sol, rows_per_tile=96, stragglers=1,
+                                      speeds=s_plan))
+        idxs.append(cache[avail])
+    stack = build_plan_stack(plans)
+    realized, _ = draw_scenarios(s_plan, 20 * 64, 0.3, rng, range(6))
+    expect = simulate_batch(
+        stack, realized,
+        plan_index=np.repeat(np.asarray(idxs, np.int64), 64),
+        on_infeasible="inf",
+    ).completion_times.reshape(20, 64)
+    assert np.array_equal(res.completion_times, expect)
+    assert res.plans_compiled == len(plans)
+
+
+def test_sweep_churn_shim_matches_engine():
+    p = cyclic_placement(6, 6, 3)
+
+    def mk_events():
+        tr = MarkovChurnTrace(6, p_preempt=0.25, p_arrive=0.6, seed=7,
+                              placement=p, min_holders=2)
+        return [tr.step() for _ in range(15)]
+
+    legacy = sweep_churn(p, iter(mk_events()),
+                         cfg=SweepConfig(n_draws=32, seed=4), tolerance=1)
+    res = ElasticEngine(
+        MatVec(), Policy(stragglers=1),
+        EngineConfig(rows_per_tile=96, seed=4, n_draws=32),
+        backend="simulate", placement=p,
+    ).run(events=iter(mk_events()))
+    assert np.array_equal(legacy.completion_times, res.completion_times)
+    assert legacy.total_waste == res.total_waste
+    assert [s.available for s in legacy.steps] == \
+        [s.available for s in res.steps]
+
+
+def test_matmat_workload_scales_simulated_times_by_columns():
+    p = cyclic_placement(4, 4, 2)
+    cfg = EngineConfig(rows_per_tile=32, seed=0, n_draws=50)
+    base = ElasticEngine(MatVec(), Policy(), cfg, backend="simulate",
+                         placement=p).run(n_steps=3)
+    mm = ElasticEngine(MatMat(np.ones((8, 5), np.float32)), Policy(), cfg,
+                       backend="simulate", placement=p).run(n_steps=3)
+    assert np.array_equal(mm.completion_times, base.completion_times * 5.0)
+    assert mm.workload == "matmat"
+
+
+def test_simulate_backend_auto_tolerance_survives_forced_stragglers():
+    # Environment forces one straggler per draw -> "auto" must not pick S=0.
+    p = cyclic_placement(6, 6, 3)
+    policy = Policy(stragglers="auto", candidates=(0, 1),
+                    expected_stragglers=1, straggle_mode="uniform")
+    res = ElasticEngine(
+        MatVec(), policy,
+        EngineConfig(rows_per_tile=96, seed=1, n_draws=16),
+        backend="simulate", placement=p,
+    ).run(n_steps=2)
+    assert res.stragglers == 1
+
+
+# ---------------------------------------------------------------------- #
+# Policy / satellite fixes
+# ---------------------------------------------------------------------- #
+def test_policy_builds_placements_and_validates():
+    assert Policy(placement="cyclic", replication=2).make_placement(4).name \
+        == "cyclic"
+    assert Policy(placement="man", replication=2).make_placement(4).n_tiles \
+        == 6
+    with pytest.raises(ValueError):
+        Policy(stragglers="sometimes")
+    with pytest.raises(ValueError):
+        Policy(stragglers=-1)
+    with pytest.raises(ValueError):
+        Policy(placement="custom").make_placement(4)
+
+
+def test_man_placement_rejects_mismatched_n_tiles():
+    # C(4, 2) = 6: asking for any other positive G must raise, while 0
+    # (derive) and the exact count keep working.
+    with pytest.raises(ValueError, match="C\\(N"):
+        make_placement("man", 4, 5, 2)
+    assert make_placement("man", 4, 0, 2).n_tiles == 6
+    assert make_placement("man", 4, 6, 2).n_tiles == 6
+
+
+def test_homogeneous_scheduler_plans_with_unit_speeds():
+    p = cyclic_placement(4, 4, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=[1, 2, 3, 4],
+                          homogeneous=True)
+    plan = sched.plan_step(available=[0, 1, 2, 3])
+    ref = solve_assignment(p, np.ones(4), stragglers=0)
+    # Equal speeds -> the homogeneous branch must reproduce the unit-speed
+    # optimum (the old no-op np.where kept heterogeneous speeds by accident
+    # only in its intent; the loads are what matters).
+    assert plan.solution.c_star == pytest.approx(ref.c_star)
+    assert np.allclose(plan.plan.loads(), ref.loads)
+
+
+def test_waste_averse_path_solves_the_lp_exactly_once_per_step(monkeypatch):
+    import repro.core.scheduler as sched_mod
+
+    calls = {"n": 0}
+    real = sched_mod.solve_assignment
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(sched_mod, "solve_assignment", counting)
+    p = cyclic_placement(4, 8, 2)
+    sched = USECScheduler(p, rows_per_tile=16, initial_speeds=np.ones(4),
+                          gamma=1.0, waste_epsilon=0.10)
+    a = sched.plan_step(available=[0, 1, 2, 3])
+    assert calls["n"] == 1
+    # Massive drift forces a re-plan: previously this path solved twice
+    # (a discarded non-lexicographic probe + the adopted solve).
+    sched.report({3: a.plan.loads()[3]}, {3: a.plan.loads()[3] / 8.0})
+    b = sched.plan_step(available=[0, 1, 2, 3])
+    assert calls["n"] == 2
+    assert b.plan is not a.plan
+    # ... and small drift still reuses the old plan after its single solve.
+    sched.report({2: b.plan.loads()[2]}, {2: b.plan.loads()[2] / 1.01})
+    c = sched.plan_step(available=[0, 1, 2, 3])
+    assert calls["n"] == 3
+    assert c.plan is b.plan
+
+
+def test_matmat_without_operand_rejects_cost_scale():
+    # Silent 1.0 would label unscaled matvec times as "matmat".
+    with pytest.raises(ValueError, match="column count"):
+        MatMat().cost_scale()
+    assert MatMat(np.ones((4, 7), np.float32)).cost_scale() == 7.0
+
+
+def test_workload_cost_scales_c_star_with_times():
+    p = cyclic_placement(4, 4, 2)
+    cfg = EngineConfig(rows_per_tile=32, seed=0, n_draws=20)
+    base = ElasticEngine(MatVec(), Policy(), cfg, backend="simulate",
+                         placement=p).run(n_steps=2)
+    mm = ElasticEngine(MatMat(np.ones((8, 5), np.float32)), Policy(), cfg,
+                       backend="simulate", placement=p).run(n_steps=2)
+    # time/c* overhead ratios are unit-free: both scale by the column count.
+    assert mm.steps[0].c_star == base.steps[0].c_star * 5.0
+
+
+def test_sweep_grid_workload_axis_names_and_scales():
+    placements = {"cyclic": cyclic_placement(5, 5, 3)}
+    plain = sweep_grid(placements, (0,), (("none", 0),),
+                       SweepConfig(n_draws=40, seed=9))
+    crossed = sweep_grid(
+        placements, (0,), (("none", 0),), SweepConfig(n_draws=40, seed=9),
+        workloads={"matvec": MatVec(),
+                   "matmat4": MatMat(np.ones((4, 4), np.float32))},
+    )
+    assert [r.name for r in plain] == ["cyclic/S=0/nonex0"]
+    assert sorted(r.name for r in crossed) == [
+        "matmat4/cyclic/S=0/nonex0", "matvec/cyclic/S=0/nonex0"]
+    by = {r.name: r for r in crossed}
+    mv = by["matvec/cyclic/S=0/nonex0"]
+    mm = by["matmat4/cyclic/S=0/nonex0"]
+    assert mv.workload == "matvec" and mm.workload == "matmat"
+    # The scaled cell is exactly 4x a matvec cell run on the SAME
+    # name-derived RNG stream (each cell's stream depends only on its name).
+    import zlib
+
+    from repro.runtime.scenarios import sweep_cell
+
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [9, zlib.crc32(b"matmat4/cyclic/S=0/nonex0")]))
+    raw = sweep_cell("raw", placements["cyclic"], 0, "none", 0,
+                     SweepConfig(n_draws=40, seed=9), rng)
+    assert np.array_equal(mm.completion_times, raw.completion_times * 4.0)
+
+
+# ---------------------------------------------------------------------- #
+# Device backend (forced host devices, subprocess)
+# ---------------------------------------------------------------------- #
+def test_engine_device_matvec_bit_exact_vs_legacy_run_power_iteration():
+    out = run_with_devices("""
+import warnings
+import numpy as np
+from repro.core import cyclic_placement
+from repro.core.elastic import scripted_trace
+from repro.runtime import (ElasticRunner, RunnerConfig, SyntheticSpeedClock,
+                           make_exact_matrix, run_power_iteration)
+from repro.api import (ElasticEngine, EngineConfig, MatVecPowerIteration,
+                       Policy)
+
+dim = 4 * 96
+x = make_exact_matrix(dim, 0)
+script = {0: ((2,), ()), 1: ((), (2,)), 2: ((0,), ()), 4: ((), (0,))}
+clock = lambda: SyntheticSpeedClock([1000., 1300., 1800., 2400.],
+                                    jitter_sigma=0.05, seed=0)
+
+picker = np.random.default_rng(1)
+bad = lambda i, avail: (int(picker.choice(avail)),)
+runner = ElasticRunner(x, cyclic_placement(4, 4, 3),
+                       RunnerConfig(block_rows=16, stragglers=1,
+                                    verify="exact"), clock=clock())
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    legacy = run_power_iteration(runner, 7,
+                                 events=scripted_trace(4, script),
+                                 straggler_sets=bad, seed=0)
+
+picker = np.random.default_rng(1)
+eng = ElasticEngine(
+    MatVecPowerIteration(seed=0),
+    Policy(placement="cyclic", replication=3, stragglers=1),
+    EngineConfig(block_rows=16, verify="exact"),
+    backend="device", n_machines=4, clock=clock(),
+)
+res = eng.run(x, n_steps=7, events=scripted_trace(4, script),
+              straggler_sets=bad)
+pi = res.result
+assert np.array_equal(legacy.eigvec, pi.eigvec)
+assert legacy.residuals == pi.residuals and legacy.eigval == pi.eigval
+assert legacy.total_waste == res.total_waste
+assert [r.available for r in legacy.reports] == \\
+    [r.available for r in res.reports]
+assert res.executor_cache_size == 1, res.executor_cache_size
+print("ENGINE-PARITY-OK", pi.eigval)
+""", n_devices=4)
+    assert "ENGINE-PARITY-OK" in out
+
+
+def test_engine_device_matmat_and_mapreduce_exact_under_churn():
+    out = run_with_devices("""
+import numpy as np
+from repro.core.elastic import scripted_trace
+from repro.runtime import make_exact_matrix
+from repro.api import (ElasticEngine, EngineConfig, MapReduceRows, MatMat,
+                       Policy)
+
+dim = 4 * 96
+x = make_exact_matrix(dim, 0)
+script = {0: ((3,), ()), 1: ((1,), (3,)), 2: ((), (1,))}
+policy = Policy(placement="cyclic", replication=3, stragglers=1)
+cfg = EngineConfig(block_rows=16, verify="exact")
+
+# MatMat: Y = X @ W, W grid-valued so the combine is bit-exact; one forced
+# straggler per step exercises the include-mask path on 2-d outputs.
+rng = np.random.default_rng(5)
+W = (np.round(rng.normal(size=(dim, 8)) * 16) / 16).astype(np.float32)
+res = ElasticEngine(MatMat(W), policy, cfg, backend="device",
+                    n_machines=4).run(
+    x, n_steps=4, events=scripted_trace(4, script),
+    straggler_sets=lambda i, a: (a[0],))
+assert np.array_equal(res.result, x.astype(np.float64) @ W.astype(np.float64))
+assert res.executor_cache_size == 1 and res.churn_events >= 3
+
+# MapReduceRows: per-row squared norm (map, jax) + global sum (monoid,
+# host). Integer-valued X keeps every per-row sum exactly representable.
+import jax.numpy as jnp
+wl = MapReduceRows(
+    row_fn=lambda xb, w2: jnp.sum(xb.astype(jnp.float32) ** 2, axis=1,
+                                  keepdims=True),
+    reduce_fn=lambda mapped: float(mapped.sum()),
+    out_cols=1,
+    ref_row_fn=lambda x64, w: np.sum(x64 ** 2, axis=1, keepdims=True),
+)
+eng2 = ElasticEngine(wl, policy, cfg, backend="device", n_machines=4)
+res2 = eng2.run(
+    x, n_steps=4, events=scripted_trace(4, script),
+    straggler_sets=lambda i, a: (a[-1],))
+assert res2.result == float(np.sum(x.astype(np.float64) ** 2))
+assert res2.executor_cache_size == 1
+
+# Re-running with fresh data must refuse (the staged matrix is fixed) ...
+try:
+    eng2.run(x + 1, n_steps=1)
+except ValueError as e:
+    assert "already staged" in str(e), e
+# ... while continuing on the staged data is fine.
+res3 = eng2.run(n_steps=1)
+assert res3.result == res2.result
+
+# A custom workload overriding ONLY tile_compute (the minimal protocol
+# surface) must run through the default executor_fn routing.
+from repro.api import Workload
+
+class RowSums(Workload):
+    name = "row_sums"
+    out_cols = 1
+    def tile_compute(self, xb, w2):
+        return jnp.sum(xb.astype(jnp.float32), axis=1, keepdims=True)
+    def verify(self, result, operand, x64, mode, atol):
+        assert np.array_equal(np.asarray(result, np.float64),
+                              x64.sum(axis=1, keepdims=True))
+    def combine(self, partials):
+        return np.asarray(partials)[:, 0]
+
+res4 = ElasticEngine(RowSums(), policy, cfg, backend="device",
+                     n_machines=4).run(
+    x, n_steps=3, events=scripted_trace(4, script),
+    operand=np.zeros(1, np.float32))
+assert np.array_equal(res4.result, x.astype(np.float64).sum(axis=1))
+print("WORKLOADS-OK", res2.result)
+""", n_devices=4)
+    assert "WORKLOADS-OK" in out
