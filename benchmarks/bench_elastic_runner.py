@@ -102,15 +102,26 @@ def run_phase(x, s_tol: int, steps: int, seed: int):
     hits = np.array([t["plan_cache_hit"] for t in traj], dtype=bool)
     misses = np.array([t["replanned"] and not t["plan_cache_hit"] for t in traj],
                       dtype=bool)
+    # Replans triggered by a membership change: pre-neighbor-precompilation
+    # these were all cache misses (the ~70ms replan-on-churn cost the paper's
+    # "short notice" reaction time is about); now they should be array swaps.
+    churny = np.array(
+        [t["replanned"] and i > 0 for i, t in enumerate(traj)], dtype=bool)
     summary = {
         "stragglers": s_tol,
         "steps": steps,
         "steps_per_sec": float(len(traj) / wall.sum()),
+        # steady state: step 1 pays the one-time executor jit compile
+        "steps_per_sec_steady": float((len(traj) - 1) / wall[1:].sum())
+        if len(traj) > 1 else None,
         "mean_wall_s": float(wall.mean()),
         "replan_latency_mean_s": float(replan.mean()),
         "replan_latency_cache_hit_s": float(replan[hits].mean()) if hits.any() else None,
         "replan_latency_cache_miss_s": float(replan[misses].mean()) if misses.any() else None,
+        "replan_latency_churn_s": float(replan[churny].mean()) if churny.any() else None,
         "plans_compiled": runner.plans_compiled,
+        "plans_precompiled": runner.plans_precompiled,
+        "precompile_s_total": runner.precompile_s,
         "plan_cache_hits": runner.cache_hits,
         "churn_events": runner.churn_events,
         "total_waste_rows": runner.total_waste,
@@ -149,7 +160,11 @@ def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
                   f"cache hit "
                   f"{(summary['replan_latency_cache_hit_s'] or 0) * 1e6:.0f}us vs "
                   f"miss {(summary['replan_latency_cache_miss_s'] or 0) * 1e6:.0f}us; "
-                  f"{summary['plans_compiled']} compiled / "
+                  f"churn replan "
+                  f"{(summary['replan_latency_churn_s'] or 0) * 1e6:.0f}us; "
+                  f"{summary['plans_compiled']} compiled "
+                  f"({summary['plans_precompiled']} speculative, "
+                  f"{summary['precompile_s_total'] * 1e3:.0f}ms off-path) / "
                   f"{summary['plan_cache_hits']} hits")
             print(f"{tag}_crosscheck,{summary['crosscheck_max_rel_err']:.3e},"
                   f"max rel err vs simulate_batch; barrier/first-arrival = "

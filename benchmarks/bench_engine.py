@@ -9,10 +9,21 @@ identical Markov churn on both backends and emits ``BENCH_engine.json``:
 - **device**: live steps/sec on 4 forced host devices through the shard_map
   executor (jit cache asserted == 1 per engine across churn).
 
+Each (workload, backend) cell runs a one-step warmup first (imports, jax
+backend init, executor jit, step-0 plan + neighbor precompile), reported as
+``cold_start_s``; ``steps_per_sec`` measures the *steady-state* churn run
+that follows — the figure the replan/step optimizations target. A
+``sweep_grid`` section times the batched placements × tolerances × policies
+sweep (one compile_plan_batch + one stacked simulate per machine
+population) against the per-cell loop.
+
 Workloads: power_iteration (matvec fast path), matmat (8-column blocked
 path), mapreduce (per-row squared norm + global sum).
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--steps 12]
+      PYTHONPATH=src python benchmarks/bench_engine.py --smoke
+(--smoke: 3 tiny steps; asserts jit_cache_size == 1 and cache-hit replans
+under 10 ms, then exits — the CI perf tripwire, no timing flakiness.)
 """
 
 import argparse
@@ -35,11 +46,11 @@ COLS = 8
 BASE_SPEEDS = (1000.0, 1400.0, 1900.0, 2600.0)
 
 
-def _workloads(x, seed):
+def _workloads(x, seed, dim=DIM):
     from repro.api import MapReduceRows, MatMat, MatVecPowerIteration
 
     rng = np.random.default_rng(seed + 1)
-    w = (np.round(rng.normal(size=(DIM, COLS)) * 16) / 16).astype(np.float32)
+    w = (np.round(rng.normal(size=(dim, COLS)) * 16) / 16).astype(np.float32)
 
     def make_mapreduce():
         import jax.numpy as jnp
@@ -71,73 +82,135 @@ def _events(placement, s_tol, steps, seed):
     return [tr.step() for _ in range(steps)]
 
 
+def _run_cell(make_wl, backend, policy, cfg, x, steps, seed, s_tol, clock):
+    """One (workload, backend) cell: warmup run, then the timed churn run."""
+    from repro.api import ElasticEngine
+
+    engine = ElasticEngine(
+        make_wl(), policy, cfg, backend=backend,
+        n_machines=N_WORKERS,
+        clock=(clock() if backend == "device" else None),
+    )
+    t0 = time.perf_counter()
+    engine.run(x if backend == "device" else None, n_steps=1)
+    cold = time.perf_counter() - t0
+
+    events = _events(engine.placement, s_tol, steps, seed)
+    t0 = time.perf_counter()
+    res = engine.run(None, n_steps=steps, events=iter(events))
+    wall = time.perf_counter() - t0
+    if backend == "device" and res.executor_cache_size != 1:
+        raise AssertionError(
+            f"executor recompiled ({res.executor_cache_size} jit entries)")
+    entry = {
+        "steps": res.n_steps,
+        "wall_s": wall,
+        "cold_start_s": cold,
+        "steps_per_sec": res.n_steps / wall,
+        "plans_compiled": res.plans_compiled,
+        "cache_hits": res.cache_hits,
+        "total_waste_rows": res.total_waste,
+    }
+    if backend == "simulate":
+        entry["draws_per_sec"] = res.n_steps * cfg.n_draws / wall
+    else:
+        runner = engine.runner
+        hit = [r.replan_s for r in res.reports if r.plan_cache_hit]
+        miss = [r.replan_s for r in res.reports
+                if r.replanned and not r.plan_cache_hit]
+        entry.update(
+            jit_cache_size=res.executor_cache_size,
+            device_wall_s=sum(r.wall_s for r in res.reports),
+            replan_hit_mean_s=float(np.mean(hit)) if hit else None,
+            replan_miss_mean_s=float(np.mean(miss)) if miss else None,
+            plans_precompiled=runner.plans_precompiled,
+            precompile_s=runner.precompile_s,
+        )
+    return entry, res
+
+
+def _run_sweep_section(seed):
+    """Batched sweep_grid vs the per-cell loop on one grid (draws/sec)."""
+    from repro.core import cyclic_placement, man_placement
+    from repro.runtime.scenarios import SweepConfig, sweep_grid
+
+    placements = {
+        "cyclic": cyclic_placement(8, 8, 3),
+        "man": man_placement(6, 3),
+    }
+    cfg = SweepConfig(n_draws=4000, rows_per_tile=96, seed=seed)
+    policies = (("none", 0), ("uniform", 1))
+    kw = dict(tolerances=(0, 1), straggler_policies=policies, cfg=cfg)
+
+    t0 = time.perf_counter()
+    cells = sweep_grid(placements, batched=True, **kw)
+    wall_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep_grid(placements, batched=False, **kw)
+    wall_c = time.perf_counter() - t0
+    draws = len(cells) * cfg.n_draws
+    return {
+        "cells": len(cells),
+        "n_draws_per_cell": cfg.n_draws,
+        "wall_s": wall_b,
+        "draws_per_sec": draws / wall_b,
+        "per_cell_wall_s": wall_c,
+        "speedup_vs_per_cell": wall_c / wall_b,
+    }
+
+
 def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
-        csv: bool = True):
-    from repro.api import ElasticEngine, EngineConfig, Policy
+        csv: bool = True, dim: int = DIM):
+    from repro.api import EngineConfig, Policy
     from repro.runtime import SyntheticSpeedClock, make_exact_matrix
 
-    x = make_exact_matrix(DIM, seed)
+    x = make_exact_matrix(dim, seed)
     s_tol = 1
     policy = Policy(placement="cyclic", replication=2 + s_tol,
                     stragglers=s_tol)
     cfg = EngineConfig(block_rows=16, verify="exact", n_draws=256, seed=seed,
                        jitter_sigma=0.2, initial_speeds=BASE_SPEEDS)
 
+    def clock():
+        return SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.05,
+                                   seed=seed)
+
     results = {}
-    for wname, make_wl in _workloads(x, seed).items():
+    for wname, make_wl in _workloads(x, seed, dim).items():
         results[wname] = {}
         for backend in ("simulate", "device"):
-            engine = ElasticEngine(
-                make_wl(), policy, cfg, backend=backend,
-                n_machines=N_WORKERS,
-                clock=(SyntheticSpeedClock(list(BASE_SPEEDS),
-                                           jitter_sigma=0.05, seed=seed)
-                       if backend == "device" else None),
-            )
-            events = _events(engine.placement, s_tol, steps, seed)
-            t0 = time.perf_counter()
-            res = engine.run(
-                x if backend == "device" else None,
-                n_steps=steps, events=iter(events),
-            )
-            wall = time.perf_counter() - t0
-            if backend == "device" and res.executor_cache_size != 1:
-                raise AssertionError(
-                    f"{wname}: executor recompiled "
-                    f"({res.executor_cache_size} jit entries)")
-            entry = {
-                "steps": res.n_steps,
-                "wall_s": wall,
-                "steps_per_sec": res.n_steps / wall,
-                "plans_compiled": res.plans_compiled,
-                "cache_hits": res.cache_hits,
-                "total_waste_rows": res.total_waste,
-            }
-            if backend == "simulate":
-                entry["draws_per_sec"] = res.n_steps * cfg.n_draws / wall
-            else:
-                entry["jit_cache_size"] = res.executor_cache_size
-                entry["device_wall_s"] = sum(r.wall_s for r in res.reports)
+            entry, _ = _run_cell(make_wl, backend, policy, cfg, x, steps,
+                                 seed, s_tol, clock)
             results[wname][backend] = entry
             if csv:
                 extra = (
                     f"{entry.get('draws_per_sec', 0):.0f} draws/s"
                     if backend == "simulate"
-                    else f"jit entries {entry['jit_cache_size']}"
+                    else f"jit entries {entry['jit_cache_size']}; replan "
+                         f"hit {1e6 * (entry['replan_hit_mean_s'] or 0):.0f}us"
                 )
                 print(f"engine_{wname}_{backend},"
-                      f"{1e6 * wall / max(res.n_steps, 1):.1f},"
+                      f"{1e6 * entry['wall_s'] / max(entry['steps'], 1):.1f},"
                       f"{entry['steps_per_sec']:.2f} steps/s over "
-                      f"{res.n_steps} steps; {extra}")
+                      f"{entry['steps']} steps (cold start "
+                      f"{entry['cold_start_s']:.2f}s); {extra}")
+
+    sweep = _run_sweep_section(seed)
+    if csv:
+        print(f"engine_sweep_grid,{1e6 * sweep['wall_s']:.0f},"
+              f"{sweep['draws_per_sec']:.0f} draws/s over "
+              f"{sweep['cells']} cells; "
+              f"{sweep['speedup_vs_per_cell']:.2f}x vs per-cell loop")
 
     doc = {
         "benchmark": "elastic_engine",
         "n_workers": N_WORKERS,
-        "dim": DIM,
+        "dim": dim,
         "matmat_cols": COLS,
         "stragglers": s_tol,
         "seed": seed,
         "results": results,
+        "sweep_grid": sweep,
     }
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)
@@ -146,10 +219,55 @@ def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
     return doc
 
 
+def run_smoke(seed: int = 0) -> None:
+    """CI tripwire: tiny config, structural assertions, no timing averages.
+
+    Catches step-path regressions (recompiles, replans falling off the
+    cache-hit fast path) without depending on absolute machine speed.
+    """
+    from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+    from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+    dim = 4 * 32
+    x = make_exact_matrix(dim, seed)
+    policy = Policy(placement="cyclic", replication=3, stragglers=1)
+    cfg = EngineConfig(block_rows=16, verify="exact", n_draws=16, seed=seed,
+                       initial_speeds=BASE_SPEEDS)
+    engine = ElasticEngine(
+        MatVecPowerIteration(seed=seed), policy, cfg, backend="device",
+        n_machines=N_WORKERS,
+        clock=SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.0,
+                                  seed=seed),
+    )
+    engine.run(x, n_steps=1)                    # warmup: jit + step-0 plan
+    res = engine.run(None, n_steps=3)           # steady state, static trace
+    assert res.executor_cache_size == 1, (
+        f"jit cache grew to {res.executor_cache_size}: the step recompiled")
+    hits = [r.replan_s for r in res.reports if r.plan_cache_hit]
+    assert hits, "no cache-hit steps in a static 3-step run"
+    assert max(hits) < 10e-3, (
+        f"cache-hit replan took {max(hits) * 1e3:.1f}ms (>= 10ms): "
+        "the hit path is doing real work again")
+    sim = ElasticEngine(
+        MatVecPowerIteration(seed=seed), policy,
+        cfg, backend="simulate", n_machines=N_WORKERS)
+    sres = sim.run(n_steps=3)
+    assert sres.completion_times.shape == (3, cfg.n_draws)
+    assert np.isfinite(sres.completion_times).all()
+    print(f"bench-smoke OK: jit_cache_size=1, "
+          f"cache-hit replan {max(hits) * 1e6:.0f}us, "
+          f"simulate {sres.n_steps}x{cfg.n_draws} draws finite")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny structural-assertion run for CI")
     args = ap.parse_args()
-    run(steps=args.steps, seed=args.seed, out=args.out)
+    if args.smoke:
+        run_smoke(seed=args.seed)
+    else:
+        run(steps=args.steps, seed=args.seed, out=args.out)

@@ -16,7 +16,16 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="structural CI tripwire: 3 tiny engine steps, "
+                         "assert jit_cache_size == 1 and cache-hit replan "
+                         "< 10ms; fails loudly on any exception")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        _run_devices_subprocess("bench_engine.py", smoke=True, strict=True)
+        print("# bench-smoke PASSED")
+        return
 
     from benchmarks import (
         bench_paper_examples,
@@ -51,10 +60,12 @@ def main(argv=None) -> None:
     print(f"# total {time.time() - t0:.1f}s")
 
 
-def _run_devices_subprocess(script: str, steps: int) -> None:
+def _run_devices_subprocess(script: str, steps: int = 0, smoke: bool = False,
+                            strict: bool = False) -> None:
     """Device benches need 4 forced host devices; jax pins the device count
     at first init, so each gets its own interpreter (same trick as the
-    tests)."""
+    tests). ``strict`` propagates a failure as a non-zero exit (the
+    bench-smoke CI job's contract)."""
     import os
     import subprocess
 
@@ -68,16 +79,18 @@ def _run_devices_subprocess(script: str, steps: int) -> None:
         env["XLA_FLAGS"] = " ".join(flags)
     else:
         env.pop("XLA_FLAGS", None)
+    argv = [sys.executable, os.path.join(bench_dir, script)]
+    argv += ["--smoke"] if smoke else ["--steps", str(steps)]
     proc = subprocess.run(
-        [sys.executable, os.path.join(bench_dir, script),
-         "--steps", str(steps)],
-        capture_output=True, text=True, env=env,
+        argv, capture_output=True, text=True, env=env,
         cwd=os.path.dirname(bench_dir),
     )
     sys.stdout.write(proc.stdout)
     if proc.returncode != 0:
         sys.stdout.write(f"# {script} FAILED (rc={proc.returncode})\n")
         sys.stdout.write(proc.stderr[-2000:] + "\n")
+        if strict:
+            raise SystemExit(proc.returncode)
 
 
 if __name__ == "__main__":

@@ -59,6 +59,12 @@ class EngineConfig:
         reference ("exact" | "allclose" | None).
 
     Simulate backend:
+      (plans integerize at ``row_align = block_rows`` whenever block_rows
+      divides rows_per_tile, and solve with the same lexicographic settings
+      as the device master — identical configs model identical plans, so
+      waste accounting agrees across backends. Note the device backend
+      derives ``rows_per_tile = q // G`` from the staged data; give the
+      simulate backend the same value explicitly when comparing the two.)
       n_draws: scenario draws per step.
       speed_mean: mean of the exponential plan-speed draw when no explicit
         speeds are given (the paper's Fig. 2 model).
@@ -76,6 +82,8 @@ class EngineConfig:
     matmul_mode: Optional[str] = None
     verify: Optional[str] = None
     allclose_atol: float = 1e-3
+    precompile_neighbors: bool = True
+    plan_cache_size: Optional[int] = None
     # simulate
     n_draws: int = 1000
     speed_mean: float = 1.0
@@ -247,6 +255,8 @@ class ElasticEngine:
             matmul_mode=self.cfg.matmul_mode,
             verify=self.cfg.verify,
             allclose_atol=self.cfg.allclose_atol,
+            precompile_neighbors=self.cfg.precompile_neighbors,
+            plan_cache_size=self.cfg.plan_cache_size,
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -322,10 +332,10 @@ class ElasticEngine:
     # Simulate backend: the batched analytical path
     # ------------------------------------------------------------------ #
     def _run_simulate(self, n_steps, events) -> EngineResult:
-        from repro.core.assignment import solve_assignment
-        from repro.core.plan import CompiledPlan, compile_plan
+        from repro.core.assignment import AssignmentSolution, solve_assignment
+        from repro.core.plan import compile_plan_batch
         from repro.runtime.scenarios import ChurnStep, draw_scenarios, summarize
-        from repro.runtime.simulate import build_plan_stack, simulate_batch
+        from repro.runtime.simulate import PlanStack, simulate_batch
 
         placement = self.placement
         N = placement.n_machines
@@ -354,13 +364,12 @@ class ElasticEngine:
                 for i in range(n_steps)
             )
 
-        # Memoized per availability state: (stack index, plan, c*, rows).
-        plan_cache: Dict[Tuple[int, ...], Tuple[int, CompiledPlan, float, Dict[int, set]]] = {}
-        plans: List[CompiledPlan] = []
-        steps_meta = []
-        prev_rows: Optional[Dict[int, set]] = None
-        prev_avail: Optional[Tuple[int, ...]] = None
-        total_waste = 0
+        # Two-pass batched planning: walk the trace once to collect the
+        # availability sequence, solve each *unique* membership in
+        # first-visit order, then compile every plan in ONE
+        # compile_plan_batch call (bitwise-identical to scalar compiles,
+        # so the legacy-parity guarantees hold unchanged).
+        avail_seq: List[Tuple[int, ...]] = []
         churn = 0
         for i, ev in enumerate(events):
             if n_steps is not None and i >= n_steps:
@@ -368,17 +377,43 @@ class ElasticEngine:
             # Same definition as the device backend (ElasticEvent.is_churn),
             # so the two backends' EngineResults agree on a shared trace.
             churn += int(ev.is_churn)
-            avail = tuple(sorted(ev.available))
-            if avail not in plan_cache:
-                sol = solve_assignment(placement, s_plan, available=avail,
-                                       stragglers=S, lexicographic=False)
-                plan = compile_plan(placement, sol,
-                                    rows_per_tile=rows_per_tile,
-                                    stragglers=S, speeds=s_plan)
-                rows = {n: plan.rows_of(n) for n in range(N)}
-                plan_cache[avail] = (len(plans), plan, sol.c_star, rows)
-                plans.append(plan)
-            idx, plan, c_star, rows = plan_cache[avail]
+            avail_seq.append(tuple(sorted(ev.available)))
+
+        index_of: Dict[Tuple[int, ...], int] = {}
+        sols: List[AssignmentSolution] = []
+        for avail in avail_seq:
+            if avail not in index_of:
+                index_of[avail] = len(sols)
+                # Lexicographic (balanced) solves — the SAME solver settings
+                # as the device backend's Algorithm-1 master, so the two
+                # backends compile identical plans for identical
+                # (membership, speeds) and their waste accounting agrees
+                # (asserted by the backend-parity test).
+                sols.append(solve_assignment(
+                    placement, s_plan, available=avail, stragglers=S))
+        # Mirror the device executor's integerization: its plans are always
+        # compiled at row_align == block_rows, so an analytical run over the
+        # same config models the same integer row split (and therefore the
+        # same transition waste) as the live run.
+        row_align = (
+            self.cfg.block_rows
+            if self.cfg.block_rows and rows_per_tile % self.cfg.block_rows == 0
+            else 1
+        )
+        plans = compile_plan_batch(
+            placement, sols, rows_per_tile=rows_per_tile,
+            stragglers=S, speeds=s_plan, row_align=row_align)
+        rows_l = [
+            {n: plan.rows_of(n) for n in range(N)} for plan in plans
+        ]
+
+        steps_meta = []
+        prev_rows: Optional[Dict[int, set]] = None
+        prev_avail: Optional[Tuple[int, ...]] = None
+        total_waste = 0
+        for i, avail in enumerate(avail_seq):
+            idx = index_of[avail]
+            rows = rows_l[idx]
             replanned = avail != prev_avail
             waste = 0
             if replanned and prev_rows is not None:
@@ -386,7 +421,8 @@ class ElasticEngine:
                 waste = transition_waste(prev_rows, rows, preempted)
                 total_waste += waste
             prev_rows = rows
-            steps_meta.append((i, avail, idx, c_star, replanned, waste))
+            steps_meta.append((i, avail, idx, sols[idx].c_star, replanned,
+                               waste))
             prev_avail = avail
 
         B = self.cfg.n_draws
@@ -396,7 +432,7 @@ class ElasticEngine:
                 completion_times=np.zeros((0, B)), stragglers=S,
             )
 
-        stack = build_plan_stack(plans)
+        stack = PlanStack.from_batch(plans)
         T = len(steps_meta)
         plan_index = np.repeat(
             np.asarray([m[2] for m in steps_meta], dtype=np.int64), B)

@@ -13,14 +13,23 @@ with combinatorial tools, which is faster, dependency-free and certifiable:
 1. *Feasibility oracle.* For a fixed completion time ``c``, feasibility is a
    transportation problem (max-flow): source →(1+S)→ g →(1)→ n →(cap_n)→ sink
    with cap_n = c·s[n].
-2. *Bisection* on ``c`` down to a tight bracket.
-3. *Min-cut refinement.* At the infeasible end of the bracket the min cut
-   identifies a bottleneck pair (A ⊆ tiles, B ⊆ machines); LP duality gives
-   the exact optimum as the rational value
+2. *Discrete Newton (Dinkelbach) iteration* on the max-cut-ratio. The min
+   cut of an infeasible evaluation identifies a bottleneck pair (A ⊆ tiles,
+   B ⊆ machines) whose LP-duality ratio
 
        c* = [ (1+S)|A| − |E(A, N∖B)| − frozen_cap(B) ] / s(B ∩ unfrozen)
 
-   eliminating bisection error (we verify feasibility at c* before adopting).
+   is a strictly larger lower bound on the optimum; re-evaluating at that
+   ratio either certifies it feasible (then it *is* the exact optimum) or
+   yields the next violated cut. Convergence takes as many max-flow calls
+   as there are distinct binding cuts on the trajectory — typically 2–4,
+   versus the ~60 of the bisection this replaced (the replan hot path's
+   dominant cost; see docs/architecture.md "performance model").
+3. *Bisection fallback.* Any numerical degeneracy in the Newton iteration
+   (non-increasing ratio, cut above the known-feasible bracket) falls back
+   to plain bisection plus one min-cut refinement at the infeasible end —
+   the pre-Newton code path, kept verbatim. Either way feasibility is
+   verified at c* before adopting, so the result is exact, not approximate.
 4. *Lexicographic (max-min fair) leveling.* The min-max optimum is not unique
    below the max; the paper's reported solutions (e.g. Fig. 3's
    μ* = [2,2,2,3,3]) are the balanced ones. Any min cut at the optimum is
@@ -46,6 +55,7 @@ from .maxflow import transportation_feasible
 from .placement import Placement
 
 _BISECT_ITERS = 60
+_NEWTON_ITERS = 24
 
 
 @dataclass
@@ -159,6 +169,37 @@ def solve_assignment(
     stored_counts = holder_mask.sum(axis=0)
     c_hi0 = float(np.max(need * stored_counts[avail_arr] / s_full[avail_arr])) + 1e-12
 
+    def _cut_of(flownet) -> Tuple[List[int], List[int], List[int]]:
+        reach = flownet.min_cut_reachable(G + N)  # source node index
+        A = [g for g in range(G) if reach[g]]
+        B = [n for n in avail if reach[G + n]]
+        B_un = [n for n in B if n in unfrozen]
+        return A, B, B_un
+
+    def _newton_round(flow_lo, c_hi: float):
+        """Discrete Newton on the max-cut-ratio.
+
+        ``flow_lo`` is the residual network of an *infeasible* evaluation;
+        its min cut is violated there, so the cut's duality ratio strictly
+        exceeds the evaluation point while never exceeding the round
+        optimum. Re-evaluating at the ratio either certifies it (feasible
+        => it IS the exact optimum) or hands back the next violated cut.
+        Returns (c_round, mu, A, B, B_un) or None on degeneracy (caller
+        falls back to bisection).
+        """
+        flow, c = flow_lo, 0.0
+        for _ in range(_NEWTON_ITERS):
+            A, B, B_un = _cut_of(flow)
+            r = _cut_ratio(holder_mask, s_full, A, B, B_un, frozen_arr, need)
+            if r is None or r <= c or r > c_hi * (1 + 1e-9):
+                return None
+            ok, mu, flow2, _ = feasible_with_caps(
+                caps_for(r * (1 + 1e-12) + 1e-15))
+            if ok:
+                return r, mu, A, B, B_un
+            c, flow = r, flow2
+        return None
+
     c_prev = c_hi0
     max_rounds = max(1, int(lex_rounds)) if lexicographic else 1
     for _round in range(max_rounds + 1):
@@ -172,7 +213,7 @@ def solve_assignment(
             unfrozen.clear()
             break
         # Feasibility at c = 0 for unfrozen -> they can all idle; freeze at 0.
-        ok0, mu0, _, _ = feasible_with_caps(caps_for(0.0))
+        ok0, mu0, flow0, _ = feasible_with_caps(caps_for(0.0))
         if ok0:
             for n in unfrozen:
                 frozen_arr[n] = 0.0
@@ -181,38 +222,41 @@ def solve_assignment(
                 c_star = 0.0
             break
 
-        # Warm-started bracket: levels are non-increasing across rounds.
-        lo, hi = 0.0, c_prev * (1 + 1e-12) + 1e-15
-        ok_hi, mu_hi, _, _ = feasible_with_caps(caps_for(hi))
-        if not ok_hi:  # pragma: no cover - hi is feasible by construction
-            raise RuntimeError("internal error: upper bracket infeasible")
-        mu_best = mu_hi
-        iters = _BISECT_ITERS if _round == 0 else 40
-        for _ in range(iters):
-            mid = 0.5 * (lo + hi)
-            ok, mu_mid, _, _ = feasible_with_caps(caps_for(mid))
-            if ok:
-                hi, mu_best = mid, mu_mid
-            else:
-                lo = mid
+        newton = _newton_round(flow0, c_prev)
+        if newton is not None:
+            c_round, mu_best, A, B, B_un = newton
+        else:
+            # Bisection fallback (the pre-Newton path, kept verbatim):
+            # warm-started bracket — levels are non-increasing across rounds.
+            lo, hi = 0.0, c_prev * (1 + 1e-12) + 1e-15
+            ok_hi, mu_hi, _, _ = feasible_with_caps(caps_for(hi))
+            if not ok_hi:  # pragma: no cover - hi is feasible by construction
+                raise RuntimeError("internal error: upper bracket infeasible")
+            mu_best = mu_hi
+            iters = _BISECT_ITERS if _round == 0 else 40
+            for _ in range(iters):
+                mid = 0.5 * (lo + hi)
+                ok, mu_mid, _, _ = feasible_with_caps(caps_for(mid))
+                if ok:
+                    hi, mu_best = mid, mu_mid
+                else:
+                    lo = mid
 
-        # Min-cut at the infeasible end certifies the exact round optimum.
-        _, _, dinic, _ = feasible_with_caps(caps_for(lo))
-        reach = dinic.min_cut_reachable(G + N)  # source node index
-        A = [g for g in range(G) if reach[g]]
-        B = [n for n in avail if reach[G + n]]
-        B_un = [n for n in B if n in unfrozen]
-        c_round = hi
-        c_exact = _cut_ratio(holder_mask, s_full, A, B, B_un, frozen_arr, need)
-        if (
-            c_exact is not None
-            and lo - tol <= c_exact <= hi + 1e-6 * max(1.0, hi)
-        ):
-            ok, mu_exact, _, _ = feasible_with_caps(
-                caps_for(c_exact * (1 + 1e-12) + 1e-15)
-            )
-            if ok:
-                c_round, mu_best = c_exact, mu_exact
+            # Min-cut at the infeasible end certifies the exact round optimum.
+            _, _, dinic, _ = feasible_with_caps(caps_for(lo))
+            A, B, B_un = _cut_of(dinic)
+            c_round = hi
+            c_exact = _cut_ratio(holder_mask, s_full, A, B, B_un,
+                                 frozen_arr, need)
+            if (
+                c_exact is not None
+                and lo - tol <= c_exact <= hi + 1e-6 * max(1.0, hi)
+            ):
+                ok, mu_exact, _, _ = feasible_with_caps(
+                    caps_for(c_exact * (1 + 1e-12) + 1e-15)
+                )
+                if ok:
+                    c_round, mu_best = c_exact, mu_exact
         mu_star = mu_best
 
         if c_star is None:

@@ -134,6 +134,183 @@ def fill_assignment(
     return TileAssignment(fr, tuple(groups))
 
 
+def _rowsum_compacted(vals: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Per-row sum of the first ``counts[i]`` entries of each row.
+
+    Bitwise-identical to ``vals[i, :counts[i]].sum()`` per row: rows are
+    grouped by count and reduced along a contiguous axis, so NumPy applies
+    the same pairwise-summation order as the scalar code's compressed-array
+    ``m[nz].sum()``. This is what makes the batched peel bit-exact.
+    """
+    out = np.zeros(vals.shape[0], dtype=np.float64)
+    for kk in np.unique(counts):
+        k = int(kk)
+        if k <= 0:
+            continue
+        rows = np.flatnonzero(counts == kk)
+        out[rows] = vals[rows][:, :k].sum(axis=1)
+    return out
+
+
+def fill_assignment_batch(
+    mu_rows: Sequence[Sequence[float]],
+    machines_rows: Sequence[Sequence[int]],
+    stragglers=0,
+) -> List[TileAssignment]:
+    """Algorithm 2 over a *stack* of independent (mu_g, machines) instances.
+
+    The greedy peel runs for all instances at once: one global iteration
+    advances every still-active instance by one peel step (compaction,
+    sort, group pick, alpha subtraction — all (M, W)-vectorized), so the
+    Python-interpreter cost is O(max iterations), not O(total iterations).
+    Instances may have different holder counts and different straggler
+    tolerances (``stragglers`` is an int or a length-M sequence).
+
+    Bitwise contract: the returned list equals
+    ``[fill_assignment(mu, ids, S) for ...]`` exactly — same floats, same
+    bits — which the property suite asserts on randomized instances. The
+    only float reductions (``l_prime``, the fraction normalizer) go through
+    :func:`_rowsum_compacted`, everything else is elementwise.
+    """
+    M = len(mu_rows)
+    if M != len(machines_rows):
+        raise ValueError("mu_rows and machines_rows must align")
+    if M == 0:
+        return []
+    if np.isscalar(stragglers):
+        strag = np.full(M, int(stragglers), dtype=np.int64)
+    else:
+        strag = np.asarray(stragglers, dtype=np.int64)
+        if strag.shape != (M,):
+            raise ValueError("stragglers must be an int or a length-M sequence")
+    L_arr = 1 + strag
+    l_max = int(L_arr.max())
+
+    n_arr = np.zeros(M, dtype=np.int64)
+    mus = []
+    idss = []
+    for i, (mu, mach) in enumerate(zip(mu_rows, machines_rows)):
+        mu = np.asarray(mu, dtype=np.float64)
+        ids_i = np.asarray(list(mach), dtype=np.int64)
+        if mu.ndim != 1 or ids_i.size != mu.size:
+            raise ValueError(f"instance {i}: mu_g and machines must align")
+        n_arr[i] = mu.size
+        mus.append(mu)
+        idss.append(ids_i)
+    W = int(n_arr.max())
+    m = np.zeros((M, W), dtype=np.float64)
+    ids = np.full((M, W), np.iinfo(np.int64).max, dtype=np.int64)
+    for i in range(M):
+        m[i, : n_arr[i]] = mus[i]
+        ids[i, : n_arr[i]] = idss[i]
+    col = np.arange(W)[None, :]
+    valid = col < n_arr[:, None]
+
+    # Validation, in the scalar order (first offending instance raises).
+    tot = _rowsum_compacted(m, n_arr)
+    bad = np.abs(tot - L_arr) > 1e-6
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise ValueError(
+            f"instance {i}: sum(mu_g) = {tot[i]} != 1+S = {int(L_arr[i])}")
+    if np.any(m < -_ZERO) or np.any(np.where(valid, m, 0.0) > 1 + 1e-9):
+        raise ValueError("mu_g entries must lie in [0, 1]")
+    m = np.clip(m, 0.0, 1.0)
+    tot = _rowsum_compacted(m, n_arr)
+    if np.any(np.max(m, axis=1) > tot / L_arr + 1e-9):
+        raise ValueError(
+            "filling precondition violated: max(mu_g) > (1+S)^{-1} sum")
+
+    fr_buf = np.zeros((M, W), dtype=np.float64)
+    grp_buf = np.full((M, W, l_max), np.iinfo(np.int64).max, dtype=np.int64)
+    fcount = np.zeros(M, dtype=np.int64)
+    checks = np.zeros(M, dtype=np.int64)
+    done = np.zeros(M, dtype=bool)
+    col_l = np.arange(l_max)[None, :]
+
+    while True:
+        nzmask = (m > _ZERO) & valid & ~done[:, None]
+        k = nzmask.sum(axis=1)
+        done |= k == 0
+        act = ~done
+        if not act.any():
+            break
+        checks[act] += 1
+        low = act & (k < L_arr)
+        if low.any():
+            i = int(np.argmax(low))
+            raise RuntimeError(
+                f"filling failed: {int(k[i])} non-zero loads < "
+                f"group size {int(L_arr[i])}")
+        # The scalar loop allows n+1 body executions, then its for-else
+        # raises unconditionally — match that budget per instance.
+        over = act & (checks > n_arr)
+        if over.any():
+            raise RuntimeError(
+                "filling did not terminate within N_g iterations")
+
+        # Compact each row's non-zero entries to the front (original order).
+        cidx = np.argsort(~nzmask, axis=1, kind="stable")
+        gath = np.take_along_axis(m, cidx, axis=1)
+        l_prime = _rowsum_compacted(gath, np.where(act, k, 0))
+        sval = np.where(col < k[:, None], gath, np.inf)
+        sord = np.argsort(sval, axis=1, kind="stable")
+        svals = np.take_along_axis(sval, sord, axis=1)
+        scol = np.take_along_axis(cidx, sord, axis=1)
+
+        # P = smallest + (L-1) largest: positions [0] + [k-L+1 .. k-1].
+        gvalid = col_l < L_arr[:, None]
+        pos = np.where(col_l == 0, 0, k[:, None] - L_arr[:, None] + col_l)
+        pos = np.clip(pos, 0, W - 1)
+        gcols = np.take_along_axis(scol, pos, axis=1)        # (M, l_max)
+
+        v0 = svals[:, 0]
+        kth = np.take_along_axis(
+            svals, np.clip(k - L_arr, 0, W - 1)[:, None], axis=1)[:, 0]
+        rich = k >= L_arr + 1
+        with np.errstate(invalid="ignore"):
+            alpha = np.where(
+                rich, np.minimum(l_prime / L_arr - kth, v0), v0)
+        alpha = np.maximum(alpha, 0.0)
+
+        stall = act & (alpha <= _ZERO)
+        emit = act & ~stall
+        srows = np.flatnonzero(stall)
+        if srows.size:
+            # Numerical stall: force-zero the smallest element.
+            m[srows, scol[srows, 0]] = 0.0
+        erows = np.flatnonzero(emit)
+        if erows.size:
+            reps = L_arr[erows]
+            rr = np.repeat(erows, reps)
+            cc = gcols[erows][gvalid[erows]]
+            m[rr, cc] -= np.repeat(alpha[erows], reps)
+            sub = m[erows]
+            m[erows] = np.where(np.abs(sub) < _ZERO, 0.0, sub)
+            fr_buf[erows, fcount[erows]] = alpha[erows]
+            gids = np.take_along_axis(ids[erows], gcols[erows], axis=1)
+            gids = np.where(gvalid[erows], gids, np.iinfo(np.int64).max)
+            grp_buf[erows, fcount[erows], :] = np.sort(gids, axis=1)
+            fcount[erows] += 1
+
+    fr_sum = _rowsum_compacted(fr_buf, fcount)
+    bad = np.abs(fr_sum - 1.0) > 1e-7
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise RuntimeError(
+            f"filling fractions sum to {fr_sum[i]}, expected 1")
+    out: List[TileAssignment] = []
+    for i in range(M):
+        F = int(fcount[i])
+        fr = fr_buf[i, :F] / fr_sum[i]
+        li = int(L_arr[i])
+        groups = tuple(
+            tuple(grp_buf[i, f, :li].tolist()) for f in range(F)
+        )
+        out.append(TileAssignment(fr, groups))
+    return out
+
+
 def homogeneous_assignment(
     machines: Sequence[int],
     stragglers: int = 0,

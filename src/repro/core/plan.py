@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .assignment import AssignmentSolution
-from .filling import TileAssignment, fill_assignment
+from .filling import TileAssignment, fill_assignment, fill_assignment_batch
 from .placement import Placement
 
 
@@ -204,6 +204,281 @@ def integerize_fractions(
     return sizes
 
 
+def _integerize_batch(
+    fr_rows: Sequence[np.ndarray], rows: int, align: int
+) -> List[np.ndarray]:
+    """:func:`integerize_fractions` over a stack of fraction vectors.
+
+    Instances are grouped by part count so each group is one vectorized
+    largest-remainder pass; bitwise-identical to the scalar function per
+    instance (floor/multiply are elementwise, the tie-break argsort is the
+    same stable sort per row, and all size arithmetic is integer-exact).
+    """
+    out: List[Optional[np.ndarray]] = [None] * len(fr_rows)
+    parts = np.asarray([len(f) for f in fr_rows], dtype=np.int64)
+    units = rows // align
+    rem = rows - units * align
+    for F in np.unique(parts):
+        F = int(F)
+        idxs = np.flatnonzero(parts == F)
+        f = np.stack([np.asarray(fr_rows[i], dtype=np.float64) for i in idxs])
+        ssum = f.sum(axis=1)
+        if np.any(np.abs(ssum - 1.0) > 1e-6):
+            raise ValueError("fractions must sum to 1")
+        raw = f * units
+        base = np.floor(raw).astype(np.int64)
+        short = units - base.sum(axis=1)
+        order = np.argsort(-(raw - base), axis=1, kind="stable")
+        rank = np.empty_like(order)
+        np.put_along_axis(
+            rank, order,
+            np.broadcast_to(np.arange(F, dtype=np.int64), order.shape),
+            axis=1)
+        base += rank < short[:, None]
+        sizes = base * align
+        if rem > 0:
+            # Tail remainder goes to the LAST non-empty part so every
+            # segment start stays align-multiple (kernel-friendly
+            # boundaries) — same rule as the scalar path.
+            nz = sizes > 0
+            lastnz = F - 1 - np.argmax(nz[:, ::-1], axis=1)
+            idx = np.where(nz.any(axis=1), lastnz, np.argmax(f, axis=1))
+            sizes[np.arange(len(idxs)), idx] += rem
+        assert np.all(sizes.sum(axis=1) == rows)
+        for r, i in enumerate(idxs):
+            out[i] = sizes[r]
+    return out  # type: ignore[return-value]
+
+
+def compile_plan_batch(
+    placements,
+    solutions: Sequence[AssignmentSolution],
+    rows_per_tile: int,
+    stragglers=0,
+    speeds=None,
+    row_align: int = 1,
+    t_max: Optional[int] = None,
+) -> List[CompiledPlan]:
+    """Compile plans for a *stack* of memberships/speed-vectors at once.
+
+    The batched membership-space plan compiler: every (plan, tile) pair
+    becomes one instance of :func:`~repro.core.filling.fill_assignment_batch`
+    (a single vectorized greedy peel for the whole stack), fraction
+    integerization runs through :func:`_integerize_batch`, combine
+    priorities are sorted in one pass per group width, and the padded
+    per-worker arrays come from the same :func:`_pack_segments` the scalar
+    compiler uses. The result is **bitwise identical** to
+    ``[compile_plan(p_b, sol_b, ...) for b in range(B)]`` — asserted by the
+    property suite against the scalar path (which is itself bit-checked
+    against :mod:`repro.core.reference`).
+
+    Args:
+      placements: one :class:`Placement` shared by every solution, or a
+        sequence of per-solution placements (they may differ in machine
+        population — a sweep-grid batch).
+      solutions: the per-membership LP solutions.
+      rows_per_tile / row_align / t_max: as :func:`compile_plan` (shared by
+        the whole batch — one static shape family).
+      stragglers: S, an int or a per-solution sequence.
+      speeds: combine-priority speeds — None (machine-id order), one (N,)
+        vector shared by all, or a per-solution sequence of vectors.
+    """
+    B = len(solutions)
+    if B == 0:
+        return []
+    if isinstance(placements, Placement):
+        placements = [placements] * B
+    if len(placements) != B:
+        raise ValueError("placements and solutions must align")
+    strag = (
+        [int(stragglers)] * B if np.isscalar(stragglers)
+        else [int(s) for s in stragglers]
+    )
+    if len(strag) != B:
+        raise ValueError("stragglers must be an int or length-B sequence")
+    if speeds is None:
+        speeds_l = [np.ones(p.n_machines) for p in placements]
+    elif isinstance(speeds, np.ndarray) and speeds.ndim == 1:
+        speeds_l = [np.asarray(speeds, dtype=np.float64)] * B
+    elif isinstance(speeds, (list, tuple)) and speeds and np.isscalar(speeds[0]):
+        speeds_l = [np.asarray(speeds, dtype=np.float64)] * B
+    else:
+        speeds_l = [np.asarray(s, dtype=np.float64) for s in speeds]
+    if len(speeds_l) != B:
+        raise ValueError("speeds must be None, one vector, or length-B")
+
+    # ---------------------------------------------------------------- #
+    # Assemble (plan, tile) instances and run ONE batched fill.
+    # ---------------------------------------------------------------- #
+    finish = []
+    inst_mu: List[np.ndarray] = []
+    inst_ids: List[List[int]] = []
+    inst_S: List[int] = []
+    inst_of: List[Tuple[int, int]] = []       # instance -> (plan, tile)
+    for b, (placement, sol) in enumerate(zip(placements, solutions)):
+        avail = set(sol.machines)
+        restricted = placement.restrict(sorted(avail))
+        s = speeds_l[b]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            finish.append(sol.loads / s)
+        for g, holders in enumerate(restricted.holders):
+            hs = list(holders)
+            inst_mu.append(sol.mu[g, hs])
+            inst_ids.append(hs)
+            inst_S.append(strag[b])
+            inst_of.append((b, g))
+    tas = fill_assignment_batch(inst_mu, inst_ids, inst_S)
+    sizes_l = _integerize_batch(
+        [ta.fractions for ta in tas], rows_per_tile, row_align)
+
+    # ---------------------------------------------------------------- #
+    # Combine priorities in one stable argsort per group width.
+    # ---------------------------------------------------------------- #
+    kept_gm: List[Optional[np.ndarray]] = [None] * len(tas)
+    kept_prio: List[Optional[np.ndarray]] = [None] * len(tas)
+    by_width: Dict[int, List[int]] = {}
+    for i, ta in enumerate(tas):
+        keep = np.flatnonzero(sizes_l[i])
+        if keep.size == 0:  # pragma: no cover - rows_per_tile >= 1
+            continue
+        kept_gm[i] = ta.group_matrix()[keep]
+        by_width.setdefault(1 + inst_S[i], []).append(i)
+    for width, idxs in by_width.items():
+        gm_all = np.concatenate([kept_gm[i] for i in idxs], axis=0)
+        b_of = np.concatenate([
+            np.full(kept_gm[i].shape[0], inst_of[i][0], dtype=np.int64)
+            for i in idxs
+        ])
+        n_max = max(speeds_l[b].shape[0] for b in set(b_of.tolist()))
+        fr_pad = np.zeros((B, n_max))
+        for b in set(b_of.tolist()):
+            fr_pad[b, : finish[b].shape[0]] = finish[b]
+        ratio = fr_pad[b_of[:, None], gm_all]
+        # Priority = sorted by (expected finish ratio, machine id): rows of
+        # gm are ascending machine ids, so a stable argsort on the ratio
+        # alone breaks ties by id exactly like the scalar compiler.
+        order = np.argsort(ratio, axis=1, kind="stable")
+        prio_all = np.take_along_axis(gm_all, order, axis=1)
+        off = 0
+        for i in idxs:
+            k = kept_gm[i].shape[0]
+            kept_prio[i] = prio_all[off: off + k]
+            off += k
+
+    # ---------------------------------------------------------------- #
+    # Emit segments per plan and pack with the shared packer.
+    # ---------------------------------------------------------------- #
+    inst_by_plan: List[List[int]] = [[] for _ in range(B)]
+    for i, (b, _g) in enumerate(inst_of):
+        inst_by_plan[b].append(i)
+    plans: List[CompiledPlan] = []
+    for b in range(B):
+        N = placements[b].n_machines
+        L = 1 + strag[b]
+        segments: List[Segment] = []
+        group_rows: List[np.ndarray] = []
+        for i in inst_by_plan[b]:
+            sizes = sizes_l[i]
+            if int(sizes.sum()) != rows_per_tile:  # pragma: no cover
+                raise RuntimeError(
+                    f"tile {inst_of[i][1]}: assigned {sizes.sum()} != "
+                    f"{rows_per_tile} rows")
+            gm, prio = kept_gm[i], kept_prio[i]
+            if gm is None:
+                continue
+            g = inst_of[i][1]
+            keep = np.flatnonzero(sizes)
+            starts = np.cumsum(sizes) - sizes
+            for row, f in enumerate(keep.tolist()):
+                segments.append(Segment(
+                    g, int(starts[f]), int(sizes[f]),
+                    tuple(gm[row].tolist()), tuple(prio[row].tolist()),
+                ))
+            group_rows.append(gm)
+        n_seg = len(segments)
+        if n_seg:
+            group_all = np.concatenate(group_rows, axis=0)
+            tile_of = np.fromiter(
+                (s_.tile for s_ in segments), np.int32, n_seg)
+            start_of = np.fromiter(
+                (s_.row_start for s_ in segments), np.int32, n_seg)
+            len_of = np.fromiter(
+                (s_.row_len for s_ in segments), np.int32, n_seg)
+        else:
+            group_all = tile_of = start_of = len_of = None
+        seg_tile, seg_start, seg_len, seg_id, counts = _pack_segments(
+            placements[b].n_machines, group_all, tile_of, start_of, len_of,
+            t_max)
+        plan = CompiledPlan(
+            n_machines=N,
+            rows_per_tile=rows_per_tile,
+            stragglers=strag[b],
+            segments=segments,
+            seg_tile=seg_tile,
+            seg_start=seg_start,
+            seg_len=seg_len,
+            seg_id=seg_id,
+            n_valid=counts.astype(np.int32),
+        )
+        if n_seg:
+            prio_arr = np.asarray(
+                [s_.priority for s_ in segments], np.int32).reshape(n_seg, L)
+            plan._derived = (tile_of, start_of, len_of,
+                             group_all.astype(np.int32), prio_arr)
+        plans.append(plan)
+    return plans
+
+
+def _pack_segments(
+    n_machines: int,
+    group_all: Optional[np.ndarray],
+    tile_of: Optional[np.ndarray],
+    start_of: Optional[np.ndarray],
+    len_of: Optional[np.ndarray],
+    t_max: Optional[int],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized packing of per-segment arrays into padded (N, T) planes.
+
+    Worker n's slots are its segments in sid order (a stable sort of the
+    flattened membership list by worker). Shared by the scalar and batched
+    compilers, so their packed arrays are identical by construction.
+    Returns (seg_tile, seg_start, seg_len, seg_id, counts).
+    """
+    N = n_machines
+    n_seg = 0 if group_all is None else group_all.shape[0]
+    if n_seg:
+        L = group_all.shape[1]
+        flat_w = group_all.ravel().astype(np.int64)
+        flat_sid = np.repeat(np.arange(n_seg, dtype=np.int64), L)
+        order = np.argsort(flat_w, kind="stable")
+        w_sorted = flat_w[order]
+        sid_sorted = flat_sid[order]
+        counts = np.bincount(flat_w, minlength=N)
+        offsets = np.concatenate(([0], np.cumsum(counts)))[:-1]
+        t_idx = np.arange(flat_w.size) - np.repeat(offsets, counts)
+    else:
+        w_sorted = sid_sorted = t_idx = np.zeros(0, np.int64)
+        counts = np.zeros(N, np.int64)
+
+    cap = int(counts.max()) if n_seg else 0
+    if t_max is not None:
+        if t_max < cap:
+            raise ValueError(f"t_max={t_max} < required capacity {cap}")
+        cap = t_max
+    cap = max(cap, 1)
+
+    seg_tile = np.full((N, cap), -1, dtype=np.int32)
+    seg_start = np.zeros((N, cap), dtype=np.int32)
+    seg_len = np.zeros((N, cap), dtype=np.int32)
+    seg_id = np.full((N, cap), -1, dtype=np.int32)
+    if n_seg:
+        seg_tile[w_sorted, t_idx] = tile_of[sid_sorted]
+        seg_start[w_sorted, t_idx] = start_of[sid_sorted]
+        seg_len[w_sorted, t_idx] = len_of[sid_sorted]
+        seg_id[w_sorted, t_idx] = sid_sorted.astype(np.int32)
+    return seg_tile, seg_start, seg_len, seg_id, counts
+
+
 def compile_plan(
     placement: Placement,
     solution: AssignmentSolution,
@@ -263,43 +538,15 @@ def compile_plan(
         group_rows.append(gm)
 
     n_seg = len(segments)
-    # ---------------------------------------------------------------- #
-    # Vectorized packing: worker n's slots are its segments in sid order
-    # (a stable sort of the flattened membership list by worker).
-    # ---------------------------------------------------------------- #
     if n_seg:
         group_all = np.concatenate(group_rows, axis=0)     # (n_seg, L)
-        flat_w = group_all.ravel().astype(np.int64)
-        flat_sid = np.repeat(np.arange(n_seg, dtype=np.int64), L)
-        order = np.argsort(flat_w, kind="stable")
-        w_sorted = flat_w[order]
-        sid_sorted = flat_sid[order]
-        counts = np.bincount(flat_w, minlength=N)
-        offsets = np.concatenate(([0], np.cumsum(counts)))[:-1]
-        t_idx = np.arange(flat_w.size) - np.repeat(offsets, counts)
-    else:
-        w_sorted = sid_sorted = t_idx = np.zeros(0, np.int64)
-        counts = np.zeros(N, np.int64)
-
-    cap = int(counts.max()) if n_seg else 0
-    if t_max is not None:
-        if t_max < cap:
-            raise ValueError(f"t_max={t_max} < required capacity {cap}")
-        cap = t_max
-    cap = max(cap, 1)
-
-    seg_tile = np.full((N, cap), -1, dtype=np.int32)
-    seg_start = np.zeros((N, cap), dtype=np.int32)
-    seg_len = np.zeros((N, cap), dtype=np.int32)
-    seg_id = np.full((N, cap), -1, dtype=np.int32)
-    if n_seg:
         tile_of = np.fromiter((s_.tile for s_ in segments), np.int32, n_seg)
         start_of = np.fromiter((s_.row_start for s_ in segments), np.int32, n_seg)
         len_of = np.fromiter((s_.row_len for s_ in segments), np.int32, n_seg)
-        seg_tile[w_sorted, t_idx] = tile_of[sid_sorted]
-        seg_start[w_sorted, t_idx] = start_of[sid_sorted]
-        seg_len[w_sorted, t_idx] = len_of[sid_sorted]
-        seg_id[w_sorted, t_idx] = sid_sorted.astype(np.int32)
+    else:
+        group_all = tile_of = start_of = len_of = None
+    seg_tile, seg_start, seg_len, seg_id, counts = _pack_segments(
+        N, group_all, tile_of, start_of, len_of, t_max)
 
     plan = CompiledPlan(
         n_machines=N,
@@ -316,7 +563,7 @@ def compile_plan(
         prio_all = np.asarray(
             [s_.priority for s_ in segments], np.int32).reshape(n_seg, L)
         plan._derived = (tile_of, start_of, len_of,
-                         group_all.astype(np.int32), prio_all)
+                        group_all.astype(np.int32), prio_all)
     return plan
 
 

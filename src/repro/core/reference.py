@@ -157,6 +157,44 @@ def compile_plan_reference(
     )
 
 
+def compile_plan_batch_reference(
+    placements,
+    solutions: Sequence[AssignmentSolution],
+    rows_per_tile: int,
+    stragglers=0,
+    speeds=None,
+    row_align: int = 1,
+    t_max=None,
+) -> List[CompiledPlan]:
+    """Loop form of ``compile_plan_batch``: map the scalar reference compiler
+    over the stack, one membership at a time. The batched compiler must be
+    bitwise-identical to this (property-tested), exactly as the scalar
+    vectorized paths are bit-checked against their loop forms above."""
+    B = len(solutions)
+    if isinstance(placements, Placement):
+        placements = [placements] * B
+    strag = (
+        [int(stragglers)] * B if np.isscalar(stragglers)
+        else [int(s) for s in stragglers]
+    )
+    if speeds is None:
+        speeds_l = [None] * B
+    elif isinstance(speeds, np.ndarray) and speeds.ndim == 1:
+        speeds_l = [speeds] * B
+    elif isinstance(speeds, (list, tuple)) and speeds and np.isscalar(speeds[0]):
+        speeds_l = [np.asarray(speeds, dtype=np.float64)] * B
+    else:
+        speeds_l = list(speeds)
+    return [
+        compile_plan_reference(
+            placements[b], solutions[b], rows_per_tile,
+            stragglers=strag[b], speeds=speeds_l[b], row_align=row_align,
+            t_max=t_max,
+        )
+        for b in range(B)
+    ]
+
+
 def loads_reference(plan: CompiledPlan) -> np.ndarray:
     """Original per-segment accumulation of per-machine loads."""
     out = np.zeros(plan.n_machines)

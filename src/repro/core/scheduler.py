@@ -24,7 +24,7 @@ import numpy as np
 from .assignment import AssignmentSolution, solve_assignment
 from .elastic import AvailabilityTrace
 from .placement import Placement
-from .plan import CompiledPlan, compile_plan
+from .plan import CompiledPlan, compile_plan, compile_plan_batch
 from .speed import SpeedEstimator
 
 
@@ -90,6 +90,62 @@ class USECScheduler:
     def speeds(self) -> np.ndarray:
         """Current EWMA speed estimates (copy) — what the next plan will see."""
         return self.estimator.speeds
+
+    @property
+    def plan_speeds(self) -> np.ndarray:
+        """The speeds the next solve will actually plan under (copy):
+        the EWMA estimates, or all-ones in ``homogeneous`` baseline mode."""
+        s_hat = self.estimator.speeds
+        return np.ones_like(s_hat) if self.homogeneous else s_hat
+
+    def probe_c_star(self, available: Sequence[int]) -> float:
+        """Fresh optimum c* for ``available`` under the current plan speeds
+        (one cheap non-lexicographic solve; no scheduler state is touched).
+        The runner's speed-drift gate compares a memoized plan against this
+        before paying for a full re-plan."""
+        return solve_assignment(
+            self.placement, self.plan_speeds, available=available,
+            stragglers=self.stragglers, lexicographic=False,
+        ).c_star
+
+    def plan_batch(self, memberships: Sequence[Sequence[int]]) -> Tuple[StepPlan, ...]:
+        """Plan a *stack* of membership states under the current estimates.
+
+        Solves each membership's LP (same settings as :meth:`plan_step`'s
+        fresh-solve path) and compiles every plan in ONE
+        :func:`~repro.core.plan.compile_plan_batch` call — the batched
+        membership-space compiler. Unlike :meth:`plan_step` this touches no
+        scheduler state (no estimator update, no waste-averse previous
+        plan), so the runner can speculatively pre-compile the churn
+        neighborhood of the current membership without perturbing the
+        Algorithm-1 loop. Each returned plan is bitwise-identical to what
+        ``plan_step`` would compile for that membership at this estimator
+        state."""
+        s_hat = self.estimator.speeds
+        s_plan = self.plan_speeds
+        avail_ts = [
+            tuple(sorted(int(a) for a in av)) for av in memberships
+        ]
+        sols = [
+            solve_assignment(
+                self.placement, s_plan, available=av,
+                stragglers=self.stragglers,
+            )
+            for av in avail_ts
+        ]
+        plans = compile_plan_batch(
+            self.placement, sols,
+            rows_per_tile=self.rows_per_tile,
+            stragglers=self.stragglers,
+            speeds=s_plan,
+            row_align=self.row_align,
+            t_max=self.t_max,
+        )
+        return tuple(
+            StepPlan(step=self._step, available=av, speeds=s_hat,
+                     solution=sol, plan=plan)
+            for av, sol, plan in zip(avail_ts, sols, plans)
+        )
 
     def plan_step(
         self,

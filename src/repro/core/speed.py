@@ -31,6 +31,13 @@ class SpeedEstimator:
     def speeds(self) -> np.ndarray:
         return self._s.copy()
 
+    def set_speed(self, n: int, value: float) -> None:
+        """Overwrite one machine's estimate (no EWMA mixing) — used to pin a
+        never-measured machine at the fleet average until it reports."""
+        if value <= 0 or not np.isfinite(value):
+            raise ValueError(f"speed must be positive and finite, got {value}")
+        self._s[int(n)] = float(value)
+
     def update(self, measured: Dict[int, float]) -> np.ndarray:
         """Mix in per-machine measurements {machine_id: nu}. Returns s_hat."""
         for n, nu in measured.items():

@@ -31,9 +31,9 @@ import numpy as np
 
 from repro.core.placement import Placement
 from repro.core.assignment import solve_assignment
-from repro.core.plan import compile_plan
+from repro.core.plan import compile_plan, compile_plan_batch
 
-from .simulate import StragglerProcess, simulate_batch
+from .simulate import PlanStack, StragglerProcess, simulate_batch
 
 
 # ---------------------------------------------------------------------- #
@@ -220,6 +220,7 @@ def sweep_grid(
     straggler_policies: Sequence[Tuple[str, int]] = (("none", 0),),
     cfg: SweepConfig = SweepConfig(),
     workloads: Optional[Mapping[str, "object"]] = None,
+    batched: bool = True,
 ) -> List[ScenarioResult]:
     """Cross workloads × placements × tolerances × straggler policies.
 
@@ -234,9 +235,17 @@ def sweep_grid(
     and named ``{wname}/{pname}/S={S}/{mode}x{count}``. None (the default)
     keeps the legacy matvec-only grid with unprefixed cell names — and the
     exact legacy RNG streams.
+
+    With ``batched`` (the default) the whole grid compiles through ONE
+    :func:`repro.core.plan.compile_plan_batch` call and evaluates through
+    one stacked :func:`simulate_batch` call per machine population —
+    bitwise-identical results to the per-cell path (``batched=False``,
+    which simply maps :func:`sweep_cell`), because the batch compiler is
+    bit-exact against the scalar one and a stacked simulate evaluates each
+    draw against its own plan's unpadded segment table.
     """
     axis = {None: None} if workloads is None else dict(workloads)
-    out: List[ScenarioResult] = []
+    cells = []           # (name, placement, S, mode, count, workload, rng)
     for wname, wl in sorted(axis.items(), key=lambda kv: kv[0] or ""):
         for pname, placement in sorted(placements.items()):
             for S in tolerances:
@@ -248,9 +257,85 @@ def sweep_grid(
                         name = f"{wname}/{name}"
                     rng = np.random.default_rng(np.random.SeedSequence(
                         [cfg.seed, zlib.crc32(name.encode("utf-8"))]))
-                    out.append(sweep_cell(
-                        name, placement, S, mode, count, cfg, rng,
-                        workload=wl))
+                    cells.append(
+                        (name, placement, S, mode, count, wl, rng))
+    if not batched:
+        return [
+            sweep_cell(name, placement, S, mode, count, cfg, rng,
+                       workload=wl)
+            for name, placement, S, mode, count, wl, rng in cells
+        ]
+    if not cells:
+        return []
+
+    # Phase 1 — per-cell plan speeds + LP solve, in cell order (each cell's
+    # RNG consumption is exactly sweep_cell's, so streams are unchanged).
+    s_plans, sols = [], []
+    for name, placement, S, mode, count, wl, rng in cells:
+        if cfg.plan_speeds is not None:
+            s_plan = np.asarray(cfg.plan_speeds, dtype=np.float64)
+        else:
+            s_plan = np.maximum(
+                rng.exponential(cfg.speed_mean, placement.n_machines), 1e-3)
+        s_plans.append(s_plan)
+        sols.append(solve_assignment(placement, s_plan, stragglers=S,
+                                     lexicographic=False))
+
+    # Phase 2 — ONE batched compile across every cell (placements and
+    # tolerances may differ per cell).
+    plans = compile_plan_batch(
+        [c[1] for c in cells], sols, rows_per_tile=cfg.rows_per_tile,
+        stragglers=[c[2] for c in cells], speeds=s_plans)
+
+    # Phase 3 — per-cell scenario draws (continuing each cell's RNG).
+    draws = []
+    for (name, placement, S, mode, count, wl, rng), plan, s_plan in zip(
+            cells, plans, s_plans):
+        avail = [n for n in range(placement.n_machines)
+                 if plan.n_valid[n] > 0]
+        draws.append(draw_scenarios(
+            s_plan, cfg.n_draws, cfg.jitter_sigma, rng, avail,
+            n_stragglers=count, straggler_mode=mode))
+
+    # Phase 4 — one stacked simulate per machine population.
+    times_l: List[Optional[np.ndarray]] = [None] * len(cells)
+    nstrag_l: List[Optional[np.ndarray]] = [None] * len(cells)
+    by_n: Dict[int, List[int]] = {}
+    for i, c in enumerate(cells):
+        by_n.setdefault(c[1].n_machines, []).append(i)
+    for _n, idxs in by_n.items():
+        stack = PlanStack.from_batch([plans[i] for i in idxs])
+        realized = np.concatenate([draws[i][0] for i in idxs], axis=0)
+        drop = np.concatenate([draws[i][1] for i in idxs], axis=0)
+        plan_index = np.repeat(np.arange(len(idxs), dtype=np.int64),
+                               cfg.n_draws)
+        timing = simulate_batch(stack, realized, dropped=drop,
+                                plan_index=plan_index, on_infeasible="inf")
+        for j, i in enumerate(idxs):
+            sel = slice(j * cfg.n_draws, (j + 1) * cfg.n_draws)
+            times_l[i] = timing.completion_times[sel]
+            nstrag_l[i] = timing.n_straggled[sel]
+
+    # Phase 5 — assemble (workload cost scaling exactly as sweep_cell).
+    out: List[ScenarioResult] = []
+    for i, (name, placement, S, mode, count, wl, rng) in enumerate(cells):
+        times = times_l[i]
+        c_star = sols[i].c_star
+        scale = 1.0 if wl is None else float(wl.cost_scale())
+        if scale != 1.0:
+            times = times * scale
+            c_star = c_star * scale
+        out.append(ScenarioResult(
+            name=name,
+            placement=placement.name,
+            tolerance=S,
+            straggler_mode=mode,
+            n_stragglers=count,
+            completion_times=times,
+            n_straggled=nstrag_l[i],
+            c_star=c_star,
+            workload="matvec" if wl is None else wl.name,
+        ))
     return out
 
 

@@ -125,6 +125,16 @@ class PlanStack:
     def n_plans(self) -> int:
         return self.loads.shape[0]
 
+    @classmethod
+    def from_batch(cls, plans: Sequence[CompiledPlan]) -> "PlanStack":
+        """Stack the output of :func:`repro.core.plan.compile_plan_batch`
+        (or any list of compiled plans over one machine population) into a
+        single batched-simulation operand. Alias of
+        :func:`build_plan_stack`, named for the batch-compile pipeline:
+        ``compile_plan_batch(...)`` → ``PlanStack.from_batch(...)`` →
+        :func:`simulate_batch`."""
+        return build_plan_stack(plans)
+
 
 def build_plan_stack(plans: Sequence[CompiledPlan]) -> PlanStack:
     """Pad per-segment arrays of several plans into one batched stack.

@@ -42,12 +42,15 @@ def test_simulate_backend_bitwise_matches_simulate_batch_static():
     cfg = EngineConfig(rows_per_tile=96, seed=3, n_draws=200, jitter_sigma=0.3)
     res = ElasticEngine(MatVec(), Policy(stragglers=0), cfg,
                         backend="simulate", placement=p).run(n_steps=4)
-    # Replicate the engine's RNG stream by hand against raw simulate_batch.
+    # Replicate the engine's RNG stream by hand against raw simulate_batch
+    # (the engine plans exactly like the device master: lexicographic solve,
+    # block-aligned integerization).
     rng = np.random.default_rng(3)
     s_plan = np.maximum(rng.exponential(1.0, 5), 1e-3)
     sol = solve_assignment(p, s_plan, available=tuple(range(5)),
-                           stragglers=0, lexicographic=False)
-    plan = compile_plan(p, sol, rows_per_tile=96, stragglers=0, speeds=s_plan)
+                           stragglers=0)
+    plan = compile_plan(p, sol, rows_per_tile=96, stragglers=0, speeds=s_plan,
+                        row_align=16)
     realized, _ = draw_scenarios(s_plan, 4 * 200, 0.3, rng, range(5))
     expect = simulate_batch(plan, realized, on_infeasible="inf") \
         .completion_times.reshape(4, 200)
@@ -72,11 +75,10 @@ def test_simulate_backend_bitwise_matches_legacy_churn_walk():
     for ev in events:
         avail = tuple(sorted(ev.available))
         if avail not in cache:
-            sol = solve_assignment(p, s_plan, available=avail, stragglers=1,
-                                   lexicographic=False)
+            sol = solve_assignment(p, s_plan, available=avail, stragglers=1)
             cache[avail] = len(plans)
             plans.append(compile_plan(p, sol, rows_per_tile=96, stragglers=1,
-                                      speeds=s_plan))
+                                      speeds=s_plan, row_align=16))
         idxs.append(cache[avail])
     stack = build_plan_stack(plans)
     realized, _ = draw_scenarios(s_plan, 20 * 64, 0.3, rng, range(6))
@@ -251,6 +253,56 @@ def test_sweep_grid_workload_axis_names_and_scales():
 # ---------------------------------------------------------------------- #
 # Device backend (forced host devices, subprocess)
 # ---------------------------------------------------------------------- #
+def test_device_and_simulate_backends_agree_on_plans_and_waste():
+    """The same config + trace must compile the same plans on both backends
+    and account the same transition waste (regression: the device backend
+    used to report ~2x the simulate backend's waste on one trace — the
+    simulate side integerized at rows_per_tile=96/row_align=1 while the
+    device executed 192/16, and a speed-estimator unit mismatch forced
+    spurious drift re-plans on top)."""
+    out = run_with_devices("""
+import numpy as np
+from repro.api import (ElasticEngine, EngineConfig, MatVecPowerIteration,
+                       Policy)
+from repro.core.elastic import MarkovChurnTrace
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+BASE = (1000., 1400., 1900., 2600.)
+x = make_exact_matrix(768, 0)
+policy = Policy(placement="cyclic", replication=3, stragglers=1)
+cfg = EngineConfig(block_rows=16, rows_per_tile=192, verify="exact",
+                   n_draws=32, seed=0, initial_speeds=BASE)
+res = {}
+for backend in ("simulate", "device"):
+    eng = ElasticEngine(
+        MatVecPowerIteration(seed=0), policy, cfg, backend=backend,
+        n_machines=4,
+        # Noiseless clock: measured speeds keep the exact BASE ratios, so
+        # the device master plans under the same speeds the analytical
+        # backend does and the plan/waste parity is exact, not approximate.
+        clock=(SyntheticSpeedClock(list(BASE), jitter_sigma=0.0, seed=0)
+               if backend == "device" else None),
+    )
+    tr = MarkovChurnTrace(4, p_preempt=0.2, p_arrive=0.6, min_available=1,
+                          seed=0, placement=eng.placement, min_holders=2)
+    evs = [tr.step() for _ in range(24)]
+    res[backend] = eng.run(x if backend == "device" else None,
+                           n_steps=24, events=iter(evs))
+sim, dev = res["simulate"], res["device"]
+assert sim.churn_events == dev.churn_events
+assert sim.total_waste == dev.total_waste, (sim.total_waste, dev.total_waste)
+assert [s.waste for s in sim.steps] == [r.waste for r in dev.reports]
+assert [s.available for s in sim.steps] == [r.available for r in dev.reports]
+# Every churn event after the first plan is a cache hit: the neighbor
+# precompiler had the next membership's plan staged before the event.
+ondemand = sum(1 for r in dev.reports if r.replanned and not r.plan_cache_hit)
+assert ondemand == 1, ondemand
+assert sim.plans_compiled == 5
+print("BACKEND-PARITY-OK", sim.total_waste)
+""", n_devices=4)
+    assert "BACKEND-PARITY-OK" in out
+
+
 def test_engine_device_matvec_bit_exact_vs_legacy_run_power_iteration():
     out = run_with_devices("""
 import warnings

@@ -148,6 +148,60 @@ print("RUNNER-OK", res.plans_compiled, res.cache_hits, res.churn_events)
     assert "RUNNER-OK" in out
 
 
+def test_runner_plan_cache_lru_eviction_and_recompile():
+    out = run_with_devices("""
+import numpy as np
+from repro.core import cyclic_placement
+from repro.core.elastic import scripted_trace
+from repro.runtime import (ElasticRunner, RunnerConfig, SyntheticSpeedClock,
+                           quantize_unit)
+
+rng = np.random.default_rng(0)
+dim = 4 * 32
+a = rng.integers(-2, 3, size=(dim, dim))
+x = (a + a.T + 10 * np.eye(dim, dtype=np.int64)).astype(np.float32)
+p = cyclic_placement(4, 4, 3)
+# Noiseless clock matching the initial estimates: the EWMA never drifts, so
+# cache behavior is purely a function of the visited membership sequence.
+BASE = [1000.0] * 4
+clock = lambda: SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0)
+# Cap the cache at 2 entries with speculative precompilation off, so the
+# eviction path is driven purely by the visited membership sequence.
+runner = ElasticRunner(
+    x, p, RunnerConfig(block_rows=16, stragglers=0, verify="exact",
+                       precompile_neighbors=False, plan_cache_size=2),
+    initial_speeds=BASE, clock=clock())
+w = quantize_unit(rng.normal(size=dim))
+# Walk memberships A, B, C, A: with capacity 2, A is evicted by C and must
+# recompile on revisit — and still verify bit-exactly.
+script = {1: ((3,), ()), 2: ((2,), (3,)), 3: ((), (2,))}
+events = scripted_trace(4, script)
+seen = []
+for i in range(4):
+    y, rep = runner.step(w, event=next(events))
+    seen.append((rep.available, rep.plan_cache_hit))
+assert len(runner._plan_cache) <= 2
+assert runner.plans_evicted >= 1, runner.plans_evicted
+# The revisit of the full membership was evicted -> fresh compile, not a hit.
+assert seen[0][0] == seen[3][0] == (0, 1, 2, 3)
+assert not seen[3][1]
+assert runner.plans_compiled == 4
+# Unbounded (default) keeps every entry and the revisit hits.
+runner2 = ElasticRunner(
+    x, p, RunnerConfig(block_rows=16, stragglers=0, verify="exact",
+                       precompile_neighbors=False),
+    initial_speeds=BASE, clock=clock())
+events = scripted_trace(4, script)
+hits = []
+for i in range(4):
+    y, rep = runner2.step(w, event=next(events))
+    hits.append(rep.plan_cache_hit)
+assert hits[3] and runner2.plans_compiled == 3 and runner2.plans_evicted == 0
+print("LRU-OK", runner.plans_evicted)
+""", n_devices=4)
+    assert "LRU-OK" in out
+
+
 def test_runner_rejects_stragglers_beyond_tolerance():
     out = run_with_devices("""
 import numpy as np

@@ -1,0 +1,196 @@
+"""Batched membership-space plan compiler: bitwise identity vs the scalar
+pipeline and the loop-form reference oracle.
+
+The contract under test is the one the runner's neighbor precompiler, the
+engine's simulate backend and the batched sweeps all rely on:
+``compile_plan_batch`` over a stack of (membership, speeds, placement,
+tolerance) instances is **bit-for-bit** the same as mapping scalar
+``compile_plan`` (itself bit-checked against ``repro.core.reference``) —
+same segments, same packed arrays, same loads, same include masks.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    compile_plan,
+    cyclic_placement,
+    man_placement,
+    solve_assignment,
+)
+from repro.core.filling import fill_assignment, fill_assignment_batch
+from repro.core.plan import compile_plan_batch
+from repro.core.reference import compile_plan_batch_reference
+from repro.runtime.simulate import PlanStack, build_plan_stack, simulate_batch
+
+
+def _random_instances(rng, n_batch):
+    """Random (placement, solution, S, speeds) stack over cyclic + MAN
+    placements, random memberships (incl. degenerate single-survivor)."""
+    placements, sols, strags, speeds_l = [], [], [], []
+    while len(sols) < n_batch:
+        n = int(rng.integers(3, 8))
+        j = int(rng.integers(2, min(4, n) + 1))
+        if rng.random() < 0.15:
+            j = n  # full replication: single-survivor memberships possible
+        kind = rng.choice(["cyclic", "man"])
+        p = cyclic_placement(n, n, j) if kind == "cyclic" \
+            else man_placement(n, j)
+        speeds = rng.exponential(1.0, n) + 0.05
+        # Random membership: drop up to j-1 machines, keep tiles reachable.
+        avail = list(range(n))
+        for _ in range(int(rng.integers(0, j))):
+            if len(avail) <= 1:
+                break
+            cand = [a for a in avail]
+            rng.shuffle(cand)
+            for d in cand:
+                trial = tuple(x for x in avail if x != d)
+                try:
+                    p.restrict(trial)
+                except Exception:
+                    continue
+                avail = list(trial)
+                break
+        restricted = p.restrict(avail)
+        S = int(rng.integers(0, restricted.replication))
+        placements.append(p)
+        sols.append(solve_assignment(p, speeds, available=avail,
+                                     stragglers=S))
+        strags.append(S)
+        speeds_l.append(speeds)
+    return placements, sols, strags, speeds_l
+
+
+def _assert_plans_identical(a, b):
+    assert a.segments == b.segments
+    for name in ("seg_tile", "seg_start", "seg_len", "seg_id", "n_valid"):
+        assert getattr(a, name).tobytes() == getattr(b, name).tobytes(), name
+    assert a.loads().tobytes() == b.loads().tobytes()
+    assert a.include_mask(()).tobytes() == b.include_mask(()).tobytes()
+    assert a.stragglers == b.stragglers
+    assert a.rows_per_tile == b.rows_per_tile
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_compile_plan_batch_bitwise_identical_to_scalar_map(seed):
+    rng = np.random.default_rng(seed)
+    placements, sols, strags, speeds_l = _random_instances(
+        rng, int(rng.integers(1, 7)))
+    rpt = int(rng.integers(16, 200))
+    align = int(rng.choice([1, 8, 16]))
+    batch = compile_plan_batch(placements, sols, rows_per_tile=rpt,
+                               stragglers=strags, speeds=speeds_l,
+                               row_align=align)
+    for b, plan in enumerate(batch):
+        scalar = compile_plan(placements[b], sols[b], rows_per_tile=rpt,
+                              stragglers=strags[b], speeds=speeds_l[b],
+                              row_align=align)
+        _assert_plans_identical(plan, scalar)
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_compile_plan_batch_bitwise_identical_to_reference_oracle(seed):
+    """... and against the pre-vectorization loop forms, end to end."""
+    rng = np.random.default_rng(seed)
+    placements, sols, strags, speeds_l = _random_instances(
+        rng, int(rng.integers(1, 5)))
+    rpt = int(rng.integers(16, 120))
+    batch = compile_plan_batch(placements, sols, rows_per_tile=rpt,
+                               stragglers=strags, speeds=speeds_l)
+    oracle = compile_plan_batch_reference(placements, sols, rows_per_tile=rpt,
+                                          stragglers=strags, speeds=speeds_l)
+    for plan, ref in zip(batch, oracle):
+        assert plan.segments == ref.segments
+        for name in ("seg_tile", "seg_start", "seg_len", "seg_id", "n_valid"):
+            assert getattr(plan, name).tobytes() == \
+                getattr(ref, name).tobytes(), name
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_fill_assignment_batch_bitwise_identical_to_scalar(seed):
+    rng = np.random.default_rng(seed)
+    mus, machs, strags = [], [], []
+    for _ in range(int(rng.integers(1, 40))):
+        n = int(rng.integers(1, 12))
+        S = int(rng.integers(0, min(3, max(n - 1, 0)) + 1))
+        L = 1 + S
+        for _ in range(100):
+            mu = rng.dirichlet(np.ones(n)) * L
+            if mu.max() <= 1.0:
+                break
+        else:
+            mu = np.full(n, L / n)
+        mus.append(mu)
+        machs.append([int(x) for x in rng.permutation(100)[:n]])
+        strags.append(S)
+    batch = fill_assignment_batch(mus, machs, strags)
+    for mu, mach, S, got in zip(mus, machs, strags, batch):
+        ref = fill_assignment(mu, mach, stragglers=S)
+        assert got.groups == ref.groups
+        assert got.fractions.tobytes() == ref.fractions.tobytes()
+
+
+def test_compile_plan_batch_single_survivor_membership():
+    # Degenerate membership: one machine holds everything (J = N), S = 0.
+    p = cyclic_placement(4, 4, 4)
+    speeds = np.array([1.0, 2.0, 3.0, 4.0])
+    sols = [
+        solve_assignment(p, speeds, available=[m], stragglers=0)
+        for m in range(4)
+    ]
+    plans = compile_plan_batch(p, sols, rows_per_tile=24, speeds=speeds)
+    for m, (plan, sol) in enumerate(zip(plans, sols)):
+        scalar = compile_plan(p, sol, rows_per_tile=24, speeds=speeds)
+        _assert_plans_identical(plan, scalar)
+        assert plan.n_valid[m] == 4 and plan.n_valid.sum() == 4
+        assert plan.loads()[m] == pytest.approx(4.0)
+
+
+def test_compile_plan_batch_feeds_plan_stack_and_simulate():
+    # compile_plan_batch -> PlanStack.from_batch -> simulate_batch is the
+    # batched sweep pipeline; completion times must equal per-plan calls.
+    rng = np.random.default_rng(3)
+    p = cyclic_placement(6, 6, 3)
+    speeds = rng.exponential(1.0, 6) + 0.05
+    sols = [solve_assignment(p, speeds, stragglers=S) for S in (0, 1, 2)]
+    plans = compile_plan_batch(p, sols, rows_per_tile=96,
+                               stragglers=[0, 1, 2], speeds=speeds)
+    stack = PlanStack.from_batch(plans)
+    assert stack.n_plans == 3
+    assert stack.loads.tobytes() == build_plan_stack(plans).loads.tobytes()
+    realized = rng.exponential(1.0, (30, 6)) + 0.05
+    pidx = rng.integers(0, 3, 30)
+    stacked = simulate_batch(stack, realized, plan_index=pidx)
+    for s in (0, 1, 2):
+        sel = pidx == s
+        single = simulate_batch(plans[s], realized[sel])
+        assert np.array_equal(stacked.completion_times[sel],
+                              single.completion_times)
+
+
+def test_fill_assignment_batch_validates_like_scalar():
+    with pytest.raises(ValueError, match="align"):
+        fill_assignment_batch([[0.5, 0.5]], [[0, 1, 2]])
+    with pytest.raises(ValueError, match="sum"):
+        fill_assignment_batch([[0.5, 0.25]], [[0, 1]])
+    with pytest.raises(ValueError, match="precondition"):
+        # sum within tolerance of 1+S but max(mu) > sum/L: unpeelable
+        fill_assignment_batch([[1.0, 0.5, 0.4999995]], [[0, 1, 2]],
+                              stragglers=1)
+    assert fill_assignment_batch([], []) == []
+
+
+def test_compile_plan_batch_shape_validation():
+    p = cyclic_placement(4, 4, 2)
+    sol = solve_assignment(p, np.ones(4))
+    with pytest.raises(ValueError, match="align"):
+        compile_plan_batch([p], [sol, sol], rows_per_tile=8)
+    with pytest.raises(ValueError, match="length-B"):
+        compile_plan_batch([p, p], [sol, sol], rows_per_tile=8,
+                           stragglers=[0, 0, 0])
+    assert compile_plan_batch(p, [], rows_per_tile=8) == []
