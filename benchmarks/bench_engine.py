@@ -7,12 +7,21 @@ identical Markov churn on both backends and emits ``BENCH_engine.json``:
   completion-time distribution, so the derived figure also reports
   scenario draws/sec (the batched engine's real unit of work);
 - **device**: live steps/sec on 4 forced host devices through the shard_map
-  executor (jit cache asserted == 1 per engine across churn).
+  executor (jit cache asserted == 1 per engine across churn), stepwise
+  (one dispatch per step, the K=1 path);
+- **device_fused**: the same churn process through the ``lax.scan`` fused
+  window driver (``fuse_steps=8``): per-step plan arrays ride the scan, so
+  churn onto cached plans stays in-window and a window costs ONE dispatch
+  + ONE result fetch for K steps. Entries record ``device_dispatches`` and
+  ``dispatches_per_step`` (~1/K) next to the steps/sec.
 
 Each (workload, backend) cell runs a one-step warmup first (imports, jax
 backend init, executor jit, step-0 plan + neighbor precompile), reported as
 ``cold_start_s``; ``steps_per_sec`` measures the *steady-state* churn run
-that follows — the figure the replan/step optimizations target. A
+that follows — the figure the replan/step optimizations target. The timed
+device cells disable the per-step float64 host re-check (``verify``, a
+debug knob that costs about as much as a whole fused step); exactness is
+enforced by the parity tests and the smoke, which keep it on. A
 ``sweep_grid`` section times the batched placements × tolerances × policies
 sweep (one compile_plan_batch + one stacked simulate per machine
 population) against the per-cell loop.
@@ -22,8 +31,10 @@ path), mapreduce (per-row squared norm + global sum).
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--steps 12]
       PYTHONPATH=src python benchmarks/bench_engine.py --smoke
-(--smoke: 3 tiny steps; asserts jit_cache_size == 1 and cache-hit replans
-under 10 ms, then exits — the CI perf tripwire, no timing flakiness.)
+(--smoke: tiny structural runs; asserts jit_cache_size == 1, cache-hit
+replans under 10 ms, and — fused — exactly ceil(steps/K) dispatches across
+boundary-aligned churn, then exits — the CI perf tripwire, no timing
+flakiness.)
 """
 
 import argparse
@@ -44,6 +55,7 @@ import numpy as np  # noqa: E402
 DIM = 768
 COLS = 8
 BASE_SPEEDS = (1000.0, 1400.0, 1900.0, 2600.0)
+FUSE_STEPS = 8
 
 
 def _workloads(x, seed, dim=DIM):
@@ -95,6 +107,7 @@ def _run_cell(make_wl, backend, policy, cfg, x, steps, seed, s_tol, clock):
     engine.run(x if backend == "device" else None, n_steps=1)
     cold = time.perf_counter() - t0
 
+    d0 = engine.runner.device_dispatches if backend == "device" else 0
     events = _events(engine.placement, s_tol, steps, seed)
     t0 = time.perf_counter()
     res = engine.run(None, n_steps=steps, events=iter(events))
@@ -118,6 +131,7 @@ def _run_cell(make_wl, backend, policy, cfg, x, steps, seed, s_tol, clock):
         hit = [r.replan_s for r in res.reports if r.plan_cache_hit]
         miss = [r.replan_s for r in res.reports
                 if r.replanned and not r.plan_cache_hit]
+        dispatches = runner.device_dispatches - d0
         entry.update(
             jit_cache_size=res.executor_cache_size,
             device_wall_s=sum(r.wall_s for r in res.reports),
@@ -125,6 +139,9 @@ def _run_cell(make_wl, backend, policy, cfg, x, steps, seed, s_tol, clock):
             replan_miss_mean_s=float(np.mean(miss)) if miss else None,
             plans_precompiled=runner.plans_precompiled,
             precompile_s=runner.precompile_s,
+            fuse_steps=cfg.fuse_steps,
+            device_dispatches=dispatches,
+            dispatches_per_step=dispatches / max(res.n_steps, 1),
         )
     return entry, res
 
@@ -175,25 +192,51 @@ def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
         return SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.05,
                                    seed=seed)
 
+    from dataclasses import replace
+
+    # Device cells time the RUNTIME, so the per-step float64 host re-check
+    # (verify="exact", a debug knob costing ~3ms/step — comparable to the
+    # whole fused step) is off for the timed churn runs; bit-exactness is
+    # enforced by the parity tests and the CI smoke, which keep it on.
+    dev_cfg = replace(cfg, verify=None)
+    # The fused device cell runs MORE steps on the same Markov churn
+    # process: windows of FUSE_STEPS amortize the dispatch round-trip, and
+    # the longer trace makes the steady-state figure stable.
+    fused_cfg = replace(dev_cfg, fuse_steps=FUSE_STEPS)
+    fused_steps = max(steps, 8 * FUSE_STEPS)
+
     results = {}
     for wname, make_wl in _workloads(x, seed, dim).items():
         results[wname] = {}
-        for backend in ("simulate", "device"):
-            entry, _ = _run_cell(make_wl, backend, policy, cfg, x, steps,
-                                 seed, s_tol, clock)
+        for backend, bcfg, bsteps in (
+            ("simulate", cfg, steps),
+            ("device", dev_cfg, steps),
+            ("device_fused", fused_cfg, fused_steps),
+        ):
+            entry, _ = _run_cell(make_wl, backend.split("_")[0], policy,
+                                 bcfg, x, bsteps, seed, s_tol, clock)
             results[wname][backend] = entry
             if csv:
-                extra = (
-                    f"{entry.get('draws_per_sec', 0):.0f} draws/s"
-                    if backend == "simulate"
-                    else f"jit entries {entry['jit_cache_size']}; replan "
-                         f"hit {1e6 * (entry['replan_hit_mean_s'] or 0):.0f}us"
-                )
+                if backend == "simulate":
+                    extra = f"{entry.get('draws_per_sec', 0):.0f} draws/s"
+                else:
+                    extra = (
+                        f"jit entries {entry['jit_cache_size']}; "
+                        f"K={entry['fuse_steps']}; "
+                        f"{entry['dispatches_per_step']:.2f} dispatches/step"
+                    )
                 print(f"engine_{wname}_{backend},"
                       f"{1e6 * entry['wall_s'] / max(entry['steps'], 1):.1f},"
                       f"{entry['steps_per_sec']:.2f} steps/s over "
                       f"{entry['steps']} steps (cold start "
                       f"{entry['cold_start_s']:.2f}s); {extra}")
+        fused = results[wname]["device_fused"]
+        fused["speedup_vs_stepwise"] = (
+            fused["steps_per_sec"] / results[wname]["device"]["steps_per_sec"]
+        )
+        if csv:
+            print(f"engine_{wname}_fused_speedup,0,"
+                  f"{fused['speedup_vs_stepwise']:.2f}x vs stepwise device")
 
     sweep = _run_sweep_section(seed)
     if csv:
@@ -208,6 +251,7 @@ def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
         "dim": dim,
         "matmat_cols": COLS,
         "stragglers": s_tol,
+        "fuse_steps": FUSE_STEPS,
         "seed": seed,
         "results": results,
         "sweep_grid": sweep,
@@ -254,9 +298,45 @@ def run_smoke(seed: int = 0) -> None:
     sres = sim.run(n_steps=3)
     assert sres.completion_times.shape == (3, cfg.n_draws)
     assert np.isfinite(sres.completion_times).all()
+
+    # Fused windows: K steps per dispatch must stay structural — ONE
+    # compiled window driver across churn, and exactly ceil(steps / K)
+    # dispatches when churn lands on window boundaries onto precompiled
+    # memberships (the speculative precompiler's contract). No timing
+    # averages, so this cannot flake on slow runners.
+    import math
+    from dataclasses import replace
+
+    from repro.core.elastic import scripted_trace
+
+    K, steps = 4, 8
+    fused = ElasticEngine(
+        MatVecPowerIteration(seed=seed), policy,
+        replace(cfg, fuse_steps=K), backend="device",
+        n_machines=N_WORKERS,
+        clock=SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.0,
+                                  seed=seed),
+    )
+    fused.run(x, n_steps=1)        # warmup: jit, step-0 plan + neighbors
+    runner = fused.runner
+    d0 = runner.device_dispatches
+    # Churn at steps 0 and 4 = the window boundaries at K=4, onto
+    # memberships the warmup's neighbor precompile already planned.
+    fres = fused.run(None, n_steps=steps,
+                     events=scripted_trace(N_WORKERS, {
+                         0: ((3,), ()), 4: ((), (3,))}))
+    dispatches = runner.device_dispatches - d0
+    assert fres.executor_cache_size == 1, (
+        f"fused jit cache grew to {fres.executor_cache_size} across churn")
+    assert dispatches == math.ceil(steps / K), (
+        f"{dispatches} dispatches for {steps} steps at fuse_steps={K} "
+        f"(expected ceil = {math.ceil(steps / K)}): churn broke a window")
+    assert fres.churn_events == 2 and len(fres.reports) == steps
     print(f"bench-smoke OK: jit_cache_size=1, "
           f"cache-hit replan {max(hits) * 1e6:.0f}us, "
-          f"simulate {sres.n_steps}x{cfg.n_draws} draws finite")
+          f"simulate {sres.n_steps}x{cfg.n_draws} draws finite, "
+          f"fused {dispatches} dispatches / {steps} steps at K={K} "
+          f"across churn")
 
 
 if __name__ == "__main__":

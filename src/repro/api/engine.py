@@ -57,6 +57,15 @@ class EngineConfig:
       matmul_mode: kernel dispatch (None = Pallas on TPU, ref elsewhere).
       verify / allclose_atol: per-step output check against float64 host
         reference ("exact" | "allclose" | None).
+      fuse_steps: K, device iterations per dispatch (1 = stepwise). With
+        K > 1 the engine runs windows through the fused ``lax.scan`` driver:
+        the workload's iterate update executes on device, per-step straggler
+        masks are an in-graph gather, and a churn event mid-window flushes
+        the window early (bitwise-equal to stepwise execution). Workloads
+        whose ``fused_update`` returns None fall back to stepwise.
+      segmented: block-list execution mode (None = per-block loop;
+        "auto"/"pallas"/"interpret"/"ref" = the segment-aware whole-list
+        path, see :class:`~repro.runtime.elastic_runner.RunnerConfig`).
 
     Simulate backend:
       (plans integerize at ``row_align = block_rows`` whenever block_rows
@@ -84,6 +93,8 @@ class EngineConfig:
     allclose_atol: float = 1e-3
     precompile_neighbors: bool = True
     plan_cache_size: Optional[int] = None
+    fuse_steps: int = 1
+    segmented: Optional[str] = None
     # simulate
     n_draws: int = 1000
     speed_mean: float = 1.0
@@ -257,6 +268,8 @@ class ElasticEngine:
             allclose_atol=self.cfg.allclose_atol,
             precompile_neighbors=self.cfg.precompile_neighbors,
             plan_cache_size=self.cfg.plan_cache_size,
+            fuse_steps=self.cfg.fuse_steps,
+            segmented=self.cfg.segmented,
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -299,20 +312,84 @@ class ElasticEngine:
                 runner.plans_compiled, runner.cache_hits)
         reports: List = []
         last = None
-        for i in range(n_steps):
-            ev = next(ev_iter, None) if ev_iter is not None else None
-            if ev is not None:
-                runner.apply_event(ev)
+        fused = runner.cfg.fuse_steps > 1 and runner.fuse_supported
+
+        def step_bad(i: int, membership) -> Tuple[int, ...]:
             if straggler_sets is None:
-                bad: Tuple[int, ...] = ()
-            elif callable(straggler_sets):
-                bad = tuple(straggler_sets(i, runner.membership))
-            else:
-                bad = tuple(straggler_sets[i])
-            y, rep = runner.step(w, stragglers=bad)
-            reports.append(rep)
-            last = wl.combine(y)
-            w = wl.consume(last, w)
+                return ()
+            if callable(straggler_sets):
+                return tuple(straggler_sets(i, membership))
+            return tuple(straggler_sets[i])
+
+        if fused:
+            # Window loop: up to K steps per dispatch. Events are consumed
+            # step-aligned; churn onto a membership whose plan is already
+            # cached (the speculative precompiler's common case) stays
+            # IN-window — the runner stacks per-step plan arrays, churn is
+            # data. Only a plan-cache miss (or past-tolerance drift)
+            # FLUSHES the window early: the steps assembled so far
+            # dispatch immediately instead of waiting behind a multi-ms
+            # solve, and the fresh compile runs at the next window's head
+            # (where the runner's speculative neighbor precompile — the
+            # part that IS overlapped with device time — then covers the
+            # following churn). Either way every event applies at the same
+            # step index as the stepwise path.
+            K = runner.cfg.fuse_steps
+            pending_ev = None
+            w_carry = w
+            i = 0
+            while i < n_steps:
+                # Fold the previous window's measurements into the EWMA
+                # BEFORE assembling this one, so plan_is_ready (the flush
+                # rule below) and the in-window _plan_for judge drift
+                # against the same estimator state.
+                runner.ingest_pending()
+                ev = pending_ev if pending_ev is not None else (
+                    next(ev_iter, None) if ev_iter is not None else None)
+                pending_ev = None
+                membership = (
+                    tuple(sorted(ev.available)) if ev is not None
+                    else runner.membership
+                )
+                evs: List = [ev]
+                sets = [step_bad(i, membership)]
+                j = i + 1
+                while j < n_steps and len(sets) < K:
+                    ev_j = next(ev_iter, None) if ev_iter is not None else None
+                    if ev_j is not None:
+                        new_mem = tuple(sorted(ev_j.available))
+                        if (
+                            (ev_j.is_churn or new_mem != membership)
+                            and not runner.plan_is_ready(new_mem)
+                        ):
+                            pending_ev = ev_j  # flush: compile off-window
+                            break
+                        membership = new_mem
+                    evs.append(ev_j)
+                    sets.append(step_bad(j, membership))
+                    j += 1
+                w_carry, ys, ws, reps = runner.step_window(
+                    w_carry, sets, events=evs)
+                reports.extend(reps)
+                # Replay the host-side fold on the window outputs: combine +
+                # consume produce the per-step results/statistics exactly as
+                # stepwise; consume's returned operand is discarded — the
+                # device already carried the (bitwise-identical) iterate.
+                for k in range(len(sets)):
+                    last = wl.combine(ys[k])
+                    wl.consume(last, ws[k])
+                i += len(sets)
+            w = np.asarray(w_carry)
+        else:
+            for i in range(n_steps):
+                ev = next(ev_iter, None) if ev_iter is not None else None
+                if ev is not None:
+                    runner.apply_event(ev)
+                bad = step_bad(i, runner.membership)
+                y, rep = runner.step(w, stragglers=bad)
+                reports.append(rep)
+                last = wl.combine(y)
+                w = wl.consume(last, w)
 
         return EngineResult(
             backend="device",

@@ -95,6 +95,54 @@ class Workload:
         del mode  # the default tile_compute path has no kernel dispatch
         return self.tile_compute
 
+    def fused_update(self, mode: Optional[str] = None) -> Optional[Callable]:
+        """The in-graph iterate update ``f(raw_result, operand) -> next
+        operand`` the fused device driver applies between the K steps of a
+        window (jax; runs inside ``lax.scan``, so the whole window is one
+        dispatch). ``raw_result`` is the assembled pre-``combine`` output —
+        identical to ``combine``'s input, so for identity-combine workloads
+        it is the step result itself.
+
+        Returning None opts the workload out of fusion (the engine falls
+        back to stepwise dispatch). The default is the fixed-point identity,
+        but ONLY when :meth:`consume` is not overridden — a workload with
+        custom host-side consume logic and no device twin must not silently
+        diverge under fusion. Overrides must be **bitwise-identical** to the
+        host ``consume`` operand chain (see
+        :class:`MatVecPowerIteration.fused_update` and the tree-reduction
+        normalize it shares with
+        :func:`repro.runtime.elastic_runner.quantize_unit`)."""
+        del mode
+        if type(self).consume is not Workload.consume:
+            return None
+        return lambda y, w: w
+
+    def segmented_fn(
+        self, mode: Optional[str] = None, block_rows: int = 16,
+    ) -> Optional[Callable]:
+        """The whole-block-list compute of the segment-aware executor path:
+        ``f(staged, blk_slot, blk_off, blk_include, w2) -> (B, block_rows,
+        cols)`` compact per-block partials (the executor scatter-adds them
+        to global rows). None disables the path for this workload.
+
+        The default gathers every block's rows once and vmaps
+        :meth:`executor_fn` over the block axis — correct for any pure
+        ``tile_compute``. The linear workloads override this with the
+        scalar-prefetched Pallas kernel dispatch
+        (:func:`repro.kernels.ops.usec_segmented`)."""
+        import jax
+
+        from repro.kernels.usec_segmented import gather_block_rows
+
+        fn = self.executor_fn(mode)
+
+        def seg(staged, blk_slot, blk_off, blk_include, w2):
+            xg = gather_block_rows(staged, blk_slot, blk_off, block_rows)
+            part = jax.vmap(lambda xb: fn(xb, w2))(xg)
+            return part * blk_include[:, None, None]
+
+        return seg
+
     def combine(self, partials: np.ndarray):
         """Host-side combine of the fully-reduced per-row partials into the
         step result. Identity for linear workloads (the psum already summed
@@ -145,6 +193,18 @@ class Workload:
         return 1.0
 
 
+def _segmented_linear(mode: Optional[str], block_rows: int) -> Callable:
+    """The linear workloads' segmented dispatch: the scalar-prefetched
+    Pallas kernel on TPU, the gathered flat matmul elsewhere — ONE binding
+    shared by :class:`MatVec` and :class:`MatMat`."""
+    import functools
+
+    from repro.kernels.ops import usec_segmented
+
+    return functools.partial(usec_segmented, block_rows=block_rows,
+                             mode=mode)
+
+
 def _verify_linear(y, ref: np.ndarray, what: str, mode: str,
                    atol: float) -> None:
     """Shared exact/allclose check used by the linear workloads."""
@@ -181,6 +241,10 @@ class MatVec(Workload):
         from repro.kernels.ops import executor_matmul
 
         return executor_matmul(mode)
+
+    def segmented_fn(self, mode: Optional[str] = None,
+                     block_rows: int = 16) -> Optional[Callable]:
+        return _segmented_linear(mode, block_rows)
 
     def verify(self, result, operand, x64, mode, atol) -> None:
         if x64 is None:
@@ -227,7 +291,7 @@ class MatVecPowerIteration(MatVec):
         return w
 
     def consume(self, result, operand):
-        from repro.runtime.elastic_runner import quantize_unit
+        from repro.runtime.elastic_runner import quantize_unit, unit_vector
 
         w64 = operand.astype(np.float64)
         self.eigval = float(w64 @ result) / float(w64 @ w64)
@@ -236,7 +300,45 @@ class MatVecPowerIteration(MatVec):
         self.residuals.append(num / den)
         if self.quantize_bits:
             return quantize_unit(result, self.quantize_bits)
-        return (result / np.linalg.norm(result)).astype(np.float32)
+        return unit_vector(result)
+
+    def fused_update(self, mode: Optional[str] = None) -> Optional[Callable]:
+        """The device twin of the host iterate chain: normalize (+ snap to
+        the 2^-bits grid) **in-graph**, bitwise-identical to
+        :func:`~repro.runtime.elastic_runner.quantize_unit` /
+        :func:`~repro.runtime.elastic_runner.unit_vector` by construction —
+        both sides square, tree-reduce, sqrt, divide and round with the same
+        explicit elementwise schedule in float32 (IEEE ops are exact given
+        the order, and the binary-tree reduction pins the order). This is
+        what makes a fused window's outputs bit-equal to K stepwise steps.
+
+        The per-step residual/eigenvalue *statistics* stay host-side: the
+        engine replays :meth:`consume` on the window's (ys, ws) outputs and
+        discards its returned operand (the device already carried it)."""
+        del mode
+        if type(self).consume is not MatVecPowerIteration.consume:
+            # A subclass with its own host consume chain has no device
+            # twin here — same safety rule as the base class: do not
+            # silently diverge under fusion, fall back to stepwise.
+            return None
+        bits = self.quantize_bits
+
+        def upd(y, w):
+            import jax.numpy as jnp
+
+            from repro.runtime.elastic_runner import _tree_sumsq
+
+            del w
+            v = y.astype(jnp.float32)
+            u = v / jnp.sqrt(_tree_sumsq(v, jnp))
+            if not bits:
+                return u
+            q = (jnp.round(u * (1 << bits)) /
+                 np.float32(1 << bits)).astype(jnp.float32)
+            fallback = jnp.zeros_like(u).at[jnp.argmax(jnp.abs(v))].set(1.0)
+            return jnp.where(jnp.any(q != 0), q, fallback)
+
+        return upd
 
     def finalize(self, runner, reports, last_result, last_operand):
         from repro.runtime.elastic_runner import PowerIterationResult
@@ -284,6 +386,10 @@ class MatMat(Workload):
         from repro.kernels.ops import executor_matmul
 
         return executor_matmul(mode, workload="matmat")
+
+    def segmented_fn(self, mode: Optional[str] = None,
+                     block_rows: int = 16) -> Optional[Callable]:
+        return _segmented_linear(mode, block_rows)
 
     def init_operand(self, rows_total, operand=None):
         w = self.w if operand is None else np.asarray(operand, dtype=np.float32)

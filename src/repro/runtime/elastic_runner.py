@@ -64,6 +64,7 @@ __all__ = [
     "make_exact_matrix",
     "quantize_unit",
     "run_power_iteration",
+    "unit_vector",
 ]
 
 
@@ -102,6 +103,20 @@ class RunnerConfig:
       keeps the legacy unbounded behavior. Long Markov traces over large N
       visit many membership states — the cap bounds host + device memory,
       and an evicted state is simply re-compiled on its next visit.
+    fuse_steps: K, iterations per device dispatch. 1 is the stepwise legacy
+      path (one round-trip per step); K > 1 runs windows of K steps through
+      the ``lax.scan`` fused driver (:meth:`ElasticRunner.step_window`) —
+      the iterate update and straggler include masks stay on device, so a
+      window costs one dispatch + one result fetch for K steps. Windows are
+      always K long in the graph (flushed/tail steps are inactive padding),
+      so the fused executor compiles exactly once.
+    segmented: per-worker block-list execution — None keeps the per-block
+      ``fori_loop``; "auto"/"pallas"/"interpret"/"ref" route the whole
+      block list through the workload's ``segmented_fn`` (the
+      scalar-prefetched Pallas kernel on TPU, one gathered flat matmul on
+      CPU). Accumulation order differs from the loop in the last ulp on
+      non-exact data (on the integer-grid matrices of the examples and
+      parity tests, all paths agree bitwise).
     """
 
     block_rows: int = 16
@@ -113,6 +128,8 @@ class RunnerConfig:
     allclose_atol: float = 1e-3
     precompile_neighbors: bool = True
     plan_cache_size: Optional[int] = None
+    fuse_steps: int = 1
+    segmented: Optional[str] = None
 
 
 @dataclass
@@ -245,7 +262,11 @@ class ElasticRunner:
 
         from repro.launch.mesh import make_worker_mesh
 
-        from .executor import make_matvec_executor, stage_matrix
+        from .executor import (
+            make_fused_executor,
+            make_matvec_executor,
+            stage_matrix,
+        )
 
         if workload is None:
             from repro.api.workload import MatVec
@@ -299,13 +320,45 @@ class ElasticRunner:
         self._staged = stage_matrix(x, placement, self.rows_per_tile)
         self.mesh = mesh if mesh is not None else make_worker_mesh(N)
         self.worker_axis = worker_axis
+        seg_fn = None
+        if cfg.segmented is not None:
+            seg_mode = None if cfg.segmented == "auto" else cfg.segmented
+            seg_fn = workload.segmented_fn(seg_mode,
+                                           block_rows=cfg.block_rows)
         self._executor = make_matvec_executor(
             self.mesh, worker_axis, rows_total=q, block_rows=cfg.block_rows,
             matmul=workload.executor_fn(cfg.matmul_mode),
             out_cols=workload.out_cols,
+            segmented_fn=seg_fn,
         )
+        # The fused window driver shares the stepwise per-worker body; the
+        # workload's fused_update is the in-graph iterate step. None means
+        # the workload cannot fuse (host-side consume with no device twin):
+        # callers fall back to stepwise dispatch.
+        self._fused = None
+        self.fuse_supported = True
+        if cfg.fuse_steps > 1:
+            upd = workload.fused_update(cfg.matmul_mode)
+            if upd is None:
+                self.fuse_supported = False
+            else:
+                self._fused = make_fused_executor(
+                    self.mesh, worker_axis, rows_total=q,
+                    block_rows=cfg.block_rows, fuse_steps=cfg.fuse_steps,
+                    matmul=workload.executor_fn(cfg.matmul_mode),
+                    out_cols=workload.out_cols, update=upd,
+                    segmented_fn=seg_fn,
+                )
         self._staged_dev = jnp.asarray(self._staged.staged)
         self._jnp = jnp
+        self._jax = jax
+        # The fused carry's placement: replicated over the worker mesh. The
+        # first window's host-provided operand is device_put with THIS
+        # sharding so it matches the carry the window returns — otherwise
+        # the second dispatch would recompile on the sharding change.
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self._replicated = NamedSharding(self.mesh, PartitionSpec())
 
         # With an explicit prior we trust its ratios; with the all-ones
         # default a never-measured machine carries no information, so it is
@@ -322,6 +375,15 @@ class ElasticRunner:
         self._pending_loads: Dict[int, float] = {}
         self._pending_durations: Dict[int, float] = {}
         self._step = 0
+        # Device-staged plan stacks of recent fused windows, keyed by the
+        # window's entry sequence (identity): revisited window signatures —
+        # the steady state, but also the churn/steady alternation of a
+        # bursty trace — reuse them without re-stacking or re-uploading.
+        # Holding the entries in the key keeps their ids stable.
+        self._window_dev: "OrderedDict[Tuple[int, ...], Tuple[Tuple, Tuple]]" \
+            = OrderedDict()
+        self._window_dev_cap = 8
+        self.device_dispatches = 0    # executor calls (windows count as 1)
         self.churn_events = 0
         self.plans_compiled = 0       # every solve+compile, incl. speculative
         self.plans_precompiled = 0    # ... of which were neighbor precompiles
@@ -344,9 +406,13 @@ class ElasticRunner:
 
     @property
     def executor_cache_size(self) -> int:
-        """Compiled-program count of the jitted step (expected: 1 forever)."""
-        f = self._executor
-        return int(f._cache_size()) if hasattr(f, "_cache_size") else -1
+        """Compiled-program count across the step drivers (expected: 1
+        forever — a fused run compiles only the window driver, a stepwise
+        run only the per-step executor; churn is data either way)."""
+        fs = [f for f in (self._executor, self._fused) if f is not None]
+        if not all(hasattr(f, "_cache_size") for f in fs):
+            return -1
+        return int(sum(f._cache_size() for f in fs))
 
     def apply_event(self, ev: ElasticEvent) -> None:
         """Adopt the event's availability set (validates tile reachability)."""
@@ -406,20 +472,28 @@ class ElasticRunner:
                     break
         return entry
 
+    def _plan_drift(self, entry: _CacheEntry, avail: Tuple[int, ...],
+                    s_hat: np.ndarray) -> float:
+        """Relative speed drift between the current estimates and the
+        snapshot a memoized plan was built under. The assignment LP is
+        scale-invariant, so only *relative* drift can make a plan stale —
+        compare the mean-normalized vectors (the EWMA's absolute scale is
+        tile-units per wall-second and moves a lot while the ratios stay
+        put). Shared by :meth:`_plan_for` and :meth:`plan_is_ready` so the
+        adoption gate and the window assembler's flush rule cannot
+        diverge."""
+        idx = np.asarray(avail, dtype=np.int64)
+        a = s_hat[idx] / s_hat[idx].mean()
+        b = entry.s_plan[idx] / entry.s_plan[idx].mean()
+        return float(np.max(np.abs(a / b - 1.0)))
+
     def _plan_for(self, avail: Tuple[int, ...]) -> Tuple[_CacheEntry, bool]:
         """Memoized planning: returns (entry, cache_hit)."""
         s_hat = self.scheduler.speeds
         entry = self._plan_cache.get(avail)
         if entry is not None:
             self._plan_cache.move_to_end(avail)
-            # The assignment LP is scale-invariant, so only *relative* speed
-            # drift can make a memoized plan stale — compare the mean-
-            # normalized vectors (the EWMA's absolute scale is tile-units
-            # per wall-second and moves a lot while the ratios stay put).
-            idx = np.asarray(avail, dtype=np.int64)
-            a = s_hat[idx] / s_hat[idx].mean()
-            b = entry.s_plan[idx] / entry.s_plan[idx].mean()
-            drift = np.max(np.abs(a / b - 1.0))
+            drift = self._plan_drift(entry, avail, s_hat)
             if drift <= self.cfg.speed_tolerance:
                 self.cache_hits += 1
                 return entry, True
@@ -446,6 +520,26 @@ class ElasticRunner:
         splan = self.scheduler.plan_step(avail)
         entry = self._store_entry(avail, splan, s_hat)
         return entry, False
+
+    def _adopt_plan(self) -> Tuple[_CacheEntry, bool, bool, int]:
+        """Plan the current membership and account the transition. Returns
+        ``(entry, cache_hit, replanned, waste)``. The ONE definition of
+        plan adoption + transition-waste accounting, shared by
+        :meth:`step` and :meth:`step_window` so the two drivers' telemetry
+        cannot diverge."""
+        prev = self._current
+        entry, cache_hit = self._plan_for(self._membership)
+        replanned = prev is None or entry is not prev
+        waste = 0
+        if replanned and prev is not None:
+            preempted = [
+                n for n in range(self.placement.n_machines)
+                if n not in set(self._membership)
+            ]
+            waste = transition_waste(prev.rows, entry.rows, preempted)
+            self.total_waste += waste
+        self._current = entry
+        return entry, cache_hit, replanned, waste
 
     def _precompile_neighbors(self, avail: Tuple[int, ...]) -> int:
         """Speculatively compile all single-preemption/arrival neighbors of
@@ -519,31 +613,8 @@ class ElasticRunner:
         t0 = time.perf_counter()
         # Feed last step's measured durations into the EWMA (Alg. 1 line 4)
         # BEFORE planning, so the plan sees the freshest estimates.
-        if self._pending_durations:
-            self.scheduler.report(self._pending_loads, self._pending_durations)
-            self._measured_ever.update(
-                int(n) for n in self._pending_durations)
-            if not self._speed_seeded and self._measured_ever:
-                est = self.scheduler.estimator
-                s = est.speeds
-                known = sorted(self._measured_ever)
-                anchor = float(np.exp(np.mean(np.log(s[known]))))
-                for n in range(self.placement.n_machines):
-                    if n not in self._measured_ever:
-                        est.set_speed(n, anchor)
-            self._pending_loads, self._pending_durations = {}, {}
-        prev = self._current
-        entry, cache_hit = self._plan_for(self._membership)
-        replanned = prev is None or entry is not prev
-        waste = 0
-        if replanned and prev is not None:
-            preempted = [
-                n for n in range(self.placement.n_machines)
-                if n not in set(self._membership)
-            ]
-            waste = transition_waste(prev.rows, entry.rows, preempted)
-            self.total_waste += waste
-        self._current = entry
+        self.ingest_pending()
+        entry, cache_hit, replanned, waste = self._adopt_plan()
         slot_d, off_d, goff_d, include0_d, nblk_d = entry.dev
         include_d = (
             include0_d if not stragglers
@@ -559,6 +630,7 @@ class ElasticRunner:
         )
         y.block_until_ready()
         wall = time.perf_counter() - t1
+        self.device_dispatches += 1
         y = np.asarray(y)
 
         row_loads = entry.block_loads * self.rows_per_tile
@@ -599,6 +671,240 @@ class ElasticRunner:
             self.precompile_s += time.perf_counter() - t2
         return y, report
 
+    def ingest_pending(self) -> None:
+        """Fold any pending measured durations into the EWMA (Algorithm 1
+        line 4). Idempotent; the stepwise path does this inline at the top
+        of :meth:`step`. The engine calls it BEFORE assembling a fused
+        window so :meth:`plan_is_ready` (the flush rule) and
+        :meth:`_plan_for` (the adoption gate inside the window) judge
+        drift against the same estimator state."""
+        if not self._pending_durations:
+            return
+        self.scheduler.report(self._pending_loads, self._pending_durations)
+        self._measured_ever.update(int(n) for n in self._pending_durations)
+        if not self._speed_seeded and self._measured_ever:
+            est = self.scheduler.estimator
+            s = est.speeds
+            known = sorted(self._measured_ever)
+            anchor = float(np.exp(np.mean(np.log(s[known]))))
+            for n in range(self.placement.n_machines):
+                if n not in self._measured_ever:
+                    est.set_speed(n, anchor)
+        self._pending_loads, self._pending_durations = {}, {}
+
+    def plan_is_ready(self, avail: Sequence[int]) -> bool:
+        """True when adopting ``avail`` would be a plan-cache HIT (no
+        compile on the step path). The engine's window assembler uses this
+        as the flush rule: churn onto a ready membership is in-window
+        data; churn onto a miss flushes the window so the assembled steps
+        dispatch immediately instead of queueing behind a multi-ms solve.
+        Mirrors :meth:`_plan_for` exactly —
+        including the c*-pricing fallback past the drift tolerance (a
+        cheap probe solve is still far cheaper than the extra dispatch a
+        spurious flush would cost). No scheduler/cache state is touched;
+        a drift re-baseline happens later, in ``_plan_for`` — which on a
+        genuine-drift step repeats the ~1 ms probe. That duplicate solve
+        is confined to churn events with past-tolerance drift, the same
+        trade the scheduler's waste-averse path already makes."""
+        key = tuple(sorted(int(a) for a in avail))
+        entry = self._plan_cache.get(key)
+        if entry is None:
+            return False
+        s_hat = self.scheduler.speeds
+        if self._plan_drift(entry, key, s_hat) <= self.cfg.speed_tolerance:
+            return True
+        c_new = self.scheduler.probe_c_star(key)
+        old_c = entry.step_plan.solution.time_of(self.scheduler.plan_speeds)
+        return bool(
+            old_c <= (1.0 + self.cfg.speed_tolerance) * c_new + 1e-12)
+
+    def step_window(
+        self,
+        w,
+        straggler_sets: Sequence[Sequence[int]] = ((),),
+        events: Optional[Sequence[Optional[ElasticEvent]]] = None,
+    ):
+        """Execute up to ``fuse_steps`` steps in ONE device dispatch.
+
+        The fused fast path. Each active step carries its OWN event,
+        straggler set and (cached) plan: the per-step plan arrays are
+        stacked into (K, N, B) scan inputs, so churn inside the window is
+        data, not a flush — the engine only flushes early (``len(sets) <
+        K``) when a step's membership is a plan-cache miss, so the steps
+        already assembled dispatch immediately instead of queueing behind
+        a multi-ms solve. The dispatched window is ALWAYS K steps
+        (inactive tail steps have zeroed trip counts/includes and their
+        outputs are discarded), so the jitted window driver compiles
+        exactly once for the whole run.
+
+        ``w`` is the iterate carry — a NumPy array on the first window, the
+        device array returned by the previous window afterwards (the carry
+        and the per-window plan/mask buffers are donated to the dispatch:
+        successive windows rewrite the same allocations, and the caller
+        must not touch a carry it has handed back). Per-step straggler sets
+        become an in-graph bitmask gather, not a host mask rebuild.
+
+        Returns ``(w_carry, ys, ws, reports)``: the next carry (device),
+        the per-active-step raw outputs and consumed operands (NumPy — one
+        fetch for the whole window), and one :class:`StepReport` per active
+        step.
+
+        Speed measurements are ingested ONCE per window (the per-window
+        per-worker feed: window wall / active steps, in tile-units/s), so
+        the EWMA and its c*-priced drift re-plan gate keep working at any
+        ``fuse_steps``; while the device runs the window, the host overlaps
+        the speculative neighbor precompile of the newest membership.
+        """
+        if self._fused is None:
+            raise RuntimeError(
+                "step_window needs fuse_steps > 1 and a fusable workload "
+                "(workload.fused_update returned None)")
+        jnp = self._jnp
+        K = self.cfg.fuse_steps
+        sets = [tuple(sorted(int(s) for s in bad)) for bad in straggler_sets]
+        n_active = len(sets)
+        if not 1 <= n_active <= K:
+            raise ValueError(
+                f"window wants {n_active} active steps, fuse_steps={K}")
+        if events is None:
+            events = [None] * n_active
+        if len(events) != n_active:
+            raise ValueError("events and straggler_sets must align per step")
+        # Feed last window's measured durations into the EWMA before any of
+        # this window's planning (Alg. 1 line 4, at window rate). The
+        # engine already did this before assembling the window (so its
+        # plan_is_ready flush decisions see the same estimates _plan_for
+        # will); the call is idempotent for direct step_window users.
+        self.ingest_pending()
+
+        N = self.placement.n_machines
+        bad = np.zeros((K, N), dtype=bool)
+        metas = []
+        had_miss = False
+        for k in range(n_active):
+            t0 = time.perf_counter()
+            if events[k] is not None:
+                self.apply_event(events[k])
+            entry, cache_hit, replanned, waste = self._adopt_plan()
+            had_miss = had_miss or not cache_hit
+            if sets[k]:
+                # Host-side feasibility check (the device gather cannot
+                # raise): include_mask errors out when a segment lost every
+                # holder, exactly like the stepwise path.
+                entry.step_plan.plan.include_mask(sets[k])
+                ids = [int(x) for x in sets[k] if 0 <= int(x) < N]
+                bad[k, ids] = True
+            metas.append((self._membership, entry, replanned, cache_hit,
+                          time.perf_counter() - t0, waste))
+        # Pad inactive tail slots with the last entry's arrays (masked out
+        # in-graph) so the window's shapes never change. The stacked plan
+        # buffers are cached ON DEVICE in a small LRU keyed by the
+        # window's entry sequence: revisited signatures (steady state,
+        # churn/steady alternation) re-upload nothing but the small
+        # mask/carry buffers — the fused analogue of the stepwise path's
+        # per-entry ``_CacheEntry.dev``.
+        pad_entry = metas[-1][1]
+        entries = tuple([m[1] for m in metas] + [pad_entry] * (K - n_active))
+        key = tuple(id(e) for e in entries)
+        cached = self._window_dev.get(key)
+        if cached is None:
+            blocks = [e.block for e in entries]
+            stacks = (
+                jnp.asarray(np.stack([b.blk_slot for b in blocks])),
+                jnp.asarray(np.stack([b.blk_off for b in blocks])),
+                jnp.asarray(np.stack([b.blk_goff for b in blocks])),
+                jnp.asarray(np.stack([b.n_blocks for b in blocks])),
+                jnp.asarray(np.stack([b.blk_prio for b in blocks])),
+                jnp.asarray(np.stack([b.blk_seg_t >= 0 for b in blocks])),
+            )
+            cached = (entries, stacks)
+            self._window_dev[key] = cached
+            while len(self._window_dev) > self._window_dev_cap:
+                self._window_dev.popitem(last=False)
+        else:
+            self._window_dev.move_to_end(key)
+        active = np.zeros((K,), dtype=bool)
+        active[:n_active] = True
+
+        t1 = time.perf_counter()
+        w_dev = (
+            w if hasattr(w, "block_until_ready")
+            else self._jax.device_put(w, self._replicated)
+        )
+        w_carry, ys_d, ws_d = self._fused(
+            self._staged_dev, *cached[1],
+            jnp.asarray(bad), jnp.asarray(active), w_dev,
+        )
+        self.device_dispatches += 1
+        # Overlap: the dispatch above is asynchronous — spend the device
+        # time on the churn neighborhood's speculative compile instead of
+        # blocking immediately (stepwise pays this after the fetch).
+        pre_s = 0.0
+        if self.cfg.precompile_neighbors and had_miss:
+            t2 = time.perf_counter()
+            self._precompile_neighbors(self._membership)
+            pre_s = time.perf_counter() - t2
+            self.precompile_s += pre_s
+        ys_d.block_until_ready()
+        wall = time.perf_counter() - t1
+        # wall_s means "executor time" (the stepwise path measures exactly
+        # that and precompiles after the fetch). On the forced-host-device
+        # setups the overlapped precompile contends for the same CPU, so
+        # subtract it rather than bill planning to the clock/EWMA on miss
+        # windows; genuine overlap on a real accelerator only makes this
+        # an under- rather than over-estimate.
+        wall = max(wall - pre_s, 1e-9)
+        ys = np.asarray(ys_d)[:n_active]
+        ws = np.asarray(ws_d)[:n_active]
+
+        # Per-window per-worker times: the window wall divided over its
+        # active steps is the per-step equivalent the EWMA expects — speeds
+        # stay in tile-units/s, so the drift-invalidation gate keeps
+        # working at any fuse_steps. Loads/durations accumulate over the
+        # window's (possibly different) per-step plans and are reported as
+        # ONE measurement at the next window.
+        per_step_wall = wall / n_active
+        loads_sum: Dict[int, float] = {}
+        dur_sum: Dict[int, float] = {}
+        per_step_durs = []
+        for k in range(n_active):
+            entry = metas[k][1]
+            row_loads = entry.block_loads * self.rows_per_tile
+            durs = self.clock.durations(
+                row_loads, metas[k][0], per_step_wall)
+            per_step_durs.append(durs)
+            for n, d in durs.items():
+                loads_sum[n] = loads_sum.get(n, 0.0) \
+                    + float(entry.block_loads[n])
+                dur_sum[n] = dur_sum.get(n, 0.0) + d
+        self._pending_loads = loads_sum
+        self._pending_durations = dur_sum
+
+        if self.cfg.verify:
+            for k in range(n_active):
+                self._verify(ys[k], ws[k])
+
+        reports = []
+        for k, (avail, entry, replanned, cache_hit, replan_s, waste) \
+                in enumerate(metas):
+            self._step += 1
+            durs = per_step_durs[k]
+            reports.append(StepReport(
+                step=self._step,
+                available=avail,
+                replanned=replanned,
+                plan_cache_hit=cache_hit,
+                replan_s=replan_s,
+                wall_s=per_step_wall,
+                modeled_completion=max(durs.values()) if durs else 0.0,
+                straggled=sets[k],
+                waste=waste,
+                jit_cache_size=self.executor_cache_size,
+                measured=durs,
+                speeds_hat=entry.s_plan,
+            ))
+        return w_carry, ys, ws, reports
+
     def _verify(self, y: np.ndarray, w: np.ndarray) -> None:
         # The reference is the workload's business: X @ w for matvec,
         # X @ W for matmat, the NumPy row map for map-reduce.
@@ -609,6 +915,30 @@ class ElasticRunner:
 # ---------------------------------------------------------------------- #
 # Power-iteration driver (shared by the example and the benchmark)
 # ---------------------------------------------------------------------- #
+def _tree_sumsq(v, xp):
+    """Sum of squares by an explicit binary tree of elementwise adds.
+
+    ``xp`` is the array module (numpy or jax.numpy). Library reductions
+    (``np.linalg.norm``, ``jnp.sum``) choose their own accumulation order —
+    pairwise in NumPy, backend-dependent in XLA — so a host value and its
+    device twin can disagree in the last ulp. This reduction pins the order:
+    square, zero-pad to a power of two, halve by adding strided slices.
+    Every step is an elementwise IEEE op, so NumPy and jax produce the SAME
+    bits — the foundation of the fused window's bitwise parity with the
+    stepwise host path (see :func:`quantize_unit` and
+    :meth:`repro.api.workload.MatVecPowerIteration.fused_update`).
+    """
+    s = v * v
+    n = 1
+    while n < s.shape[0]:
+        n *= 2
+    if n != s.shape[0]:
+        s = xp.concatenate([s, xp.zeros(n - s.shape[0], s.dtype)])
+    while s.shape[0] > 1:
+        s = s[0::2] + s[1::2]
+    return s[0]
+
+
 def make_exact_matrix(
     dim: int, seed: int = 0, lo: int = -3, hi: int = 3, diag: int = 40
 ) -> np.ndarray:
@@ -634,13 +964,29 @@ def quantize_unit(v: np.ndarray, bits: int = 8) -> np.ndarray:
     mantissa — so the distributed combine is bit-identical to a float64 host
     reference regardless of block order, and the runner's ``verify="exact"``
     mode holds at every step.
+
+    The math is float32 with a :func:`_tree_sumsq` norm: a fully explicit
+    elementwise schedule that jax reproduces bit for bit, so the fused
+    device driver can run the SAME update in-graph
+    (:meth:`~repro.api.workload.MatVecPowerIteration.fused_update`) and a
+    K-step window stays bitwise-equal to K stepwise host updates. (Snapping
+    to the grid makes the precision difference vs the old float64 normalize
+    immaterial; the grid exactness argument above is unchanged.)
     """
-    v = np.asarray(v, dtype=np.float64)
-    v = v / np.linalg.norm(v)
-    q = np.round(v * (1 << bits)) / (1 << bits)
+    v = np.asarray(v, dtype=np.float32)
+    u = v / np.sqrt(_tree_sumsq(v, np))
+    q = (np.round(u * (1 << bits)) / np.float32(1 << bits)).astype(np.float32)
     if not np.any(q):
+        q = np.zeros_like(u)
         q[int(np.argmax(np.abs(v)))] = 1.0
-    return q.astype(np.float32)
+    return q
+
+
+def unit_vector(v: np.ndarray) -> np.ndarray:
+    """Float32 normalize with the :func:`_tree_sumsq` schedule — the
+    unquantized iterate update, bitwise-reproducible on device."""
+    v = np.asarray(v, dtype=np.float32)
+    return v / np.sqrt(_tree_sumsq(v, np))
 
 
 @dataclass

@@ -16,6 +16,17 @@ Redundant (1+S) blocks are computed by all their holders; the inclusion mask
 
 The worker axis is *manual* (shard_map) while any other mesh axes stay under
 GSPMD — so the same executor works on (data,) meshes and (data, model) meshes.
+
+Two step drivers share one per-worker body (so their per-step math is the
+same compiled computation, bit for bit):
+
+- :func:`make_matvec_executor` — one dispatch per step (the K=1 path);
+- :func:`make_fused_executor`  — a ``lax.scan`` window of ``fuse_steps``
+  iterations per dispatch. The iterate update runs **on device** (the
+  workload's ``fused_update`` hook), include masks are computed **in-graph**
+  from a per-step straggler bitmask (:func:`device_include_weights`, the
+  device-side twin of :func:`refresh_include`), and the iterate carry is
+  donated — so a window costs ONE host round-trip for K steps.
 """
 
 from __future__ import annotations
@@ -89,6 +100,11 @@ class BlockPlan:
                  (-1 on padding). Lets :func:`refresh_include` recompute the
                  combine weights for a new straggler set without re-expanding
                  the block lists (the elastic runner's per-step hot path).
+    blk_prio:    (N, B, 1+S) int32 — the combine-priority order of the
+                 block's segment group (-1 on padding). The fused executor
+                 gathers include weights for ANY straggler bitmask straight
+                 from this array on device (:func:`device_include_weights`),
+                 so mid-window stragglers never touch the host.
     """
 
     blk_slot: np.ndarray
@@ -98,10 +114,24 @@ class BlockPlan:
     n_blocks: np.ndarray
     block_rows: int
     blk_seg_t: Optional[np.ndarray] = None
+    blk_prio: Optional[np.ndarray] = None
 
     @property
     def b_max(self) -> int:
         return self.blk_slot.shape[1]
+
+
+def _empty_block_plan(n: int, cap: int, block_rows: int, width: int) -> BlockPlan:
+    return BlockPlan(
+        blk_slot=np.zeros((n, cap), np.int32),
+        blk_off=np.zeros((n, cap), np.int32),
+        blk_goff=np.zeros((n, cap), np.int32),
+        blk_include=np.zeros((n, cap), np.float32),
+        n_blocks=np.zeros((n,), np.int32),
+        block_rows=block_rows,
+        blk_seg_t=np.full((n, cap), -1, np.int32),
+        blk_prio=np.full((n, cap, width), -1, np.int32),
+    )
 
 
 def block_plan(
@@ -115,12 +145,91 @@ def block_plan(
 
     Requires the plan to have been compiled with ``row_align == block_rows``
     (and ``block_rows | rows_per_tile``) so every segment is block-aligned.
+
+    Vectorized NumPy segment expansion: every (worker, slot) segment emits
+    ``seg_len // block_rows`` blocks via one repeat/cumsum pass, in the same
+    (worker, slot, block) order as the original triple loop —
+    :func:`block_plan_reference` keeps that loop form as the bitwise test
+    oracle.
     """
     if plan.rows_per_tile % block_rows:
         raise ValueError(
             f"block_rows={block_rows} must divide rows_per_tile={plan.rows_per_tile}"
         )
     inc = plan.include_mask(stragglers)
+    n, t_cap = plan.seg_len.shape
+    ln = plan.seg_len.astype(np.int64)
+    live = ln > 0
+    if np.any(ln[live] % block_rows):
+        raise ValueError(
+            "segment not block-aligned; compile the plan with "
+            f"row_align={block_rows}"
+        )
+    nb = ln // block_rows                       # (N, T) blocks per segment
+    # Flatten row-major: per-worker segments stay contiguous and ordered by
+    # slot, so per-worker block positions are a simple offset subtraction.
+    nb_flat = nb.ravel()
+    total = int(nb_flat.sum())
+    per_worker = nb.sum(axis=1)
+    cap = int(per_worker.max()) if n else 0
+    if b_max is not None:
+        if b_max < cap:
+            raise ValueError(f"b_max={b_max} < needed {cap}")
+        cap = b_max
+    cap = max(cap, 1)
+    _, _, _, _, prio = plan.seg_arrays()
+    width = prio.shape[1] if prio.size else 1 + plan.stragglers
+    bp = _empty_block_plan(n, cap, block_rows, width)
+    bp.n_blocks[:] = per_worker.astype(np.int32)
+    if total == 0:
+        return bp
+
+    seg_idx = np.repeat(np.arange(n * t_cap, dtype=np.int64), nb_flat)
+    # Within-segment block index: position minus the segment's first position.
+    seg_starts = np.concatenate(([0], np.cumsum(nb_flat)))[:-1]
+    b_in_seg = np.arange(total, dtype=np.int64) - seg_starts[seg_idx]
+    w_of = seg_idx // t_cap
+    # Per-worker slot index: position minus the worker's first position.
+    w_starts = np.concatenate(([0], np.cumsum(per_worker)))[:-1]
+    pos = np.arange(total, dtype=np.int64) - w_starts[w_of]
+
+    g = plan.seg_tile.ravel()[seg_idx].astype(np.int64)
+    off = plan.seg_start.ravel()[seg_idx].astype(np.int64) + b_in_seg * block_rows
+    slot = slot_of[w_of, g]
+    if np.any(slot < 0):
+        w_bad = int(w_of[np.argmax(slot < 0)])
+        g_bad = int(g[np.argmax(slot < 0)])
+        raise RuntimeError(f"worker {w_bad} assigned tile {g_bad} it does not store")
+    t_of = seg_idx % t_cap
+
+    bp.blk_slot[w_of, pos] = slot.astype(np.int32)
+    bp.blk_off[w_of, pos] = off.astype(np.int32)
+    bp.blk_goff[w_of, pos] = (g * plan.rows_per_tile + off).astype(np.int32)
+    bp.blk_include[w_of, pos] = inc.ravel()[seg_idx].astype(np.float32)
+    bp.blk_seg_t[w_of, pos] = t_of.astype(np.int32)
+    sid = plan.seg_id.ravel()[seg_idx]
+    if prio.size:
+        bp.blk_prio[w_of, pos] = prio[sid]
+    return bp
+
+
+def block_plan_reference(
+    plan: CompiledPlan,
+    slot_of: np.ndarray,
+    block_rows: int,
+    stragglers: Sequence[int] = (),
+    b_max: Optional[int] = None,
+) -> BlockPlan:
+    """The original triple-loop block expansion — the test oracle for the
+    vectorized :func:`block_plan` (bitwise-identical output, asserted by
+    ``tests/test_executor_blocks.py``)."""
+    if plan.rows_per_tile % block_rows:
+        raise ValueError(
+            f"block_rows={block_rows} must divide rows_per_tile={plan.rows_per_tile}"
+        )
+    inc = plan.include_mask(stragglers)
+    _, _, _, _, prio = plan.seg_arrays()
+    width = prio.shape[1] if prio.size else 1 + plan.stragglers
     n = plan.n_machines
     lists = [[] for _ in range(n)]
     for w in range(n):
@@ -139,10 +248,11 @@ def block_plan(
             if slot < 0:
                 raise RuntimeError(f"worker {w} assigned tile {g} it does not store")
             use = float(inc[w, t])
+            sid = int(plan.seg_id[w, t])
             for b in range(ln // block_rows):
                 off = st + b * block_rows
                 lists[w].append(
-                    (slot, off, g * plan.rows_per_tile + off, use, t)
+                    (slot, off, g * plan.rows_per_tile + off, use, t, sid)
                 )
     cap = max((len(l) for l in lists), default=0)
     if b_max is not None:
@@ -150,22 +260,16 @@ def block_plan(
             raise ValueError(f"b_max={b_max} < needed {cap}")
         cap = b_max
     cap = max(cap, 1)
-    bp = BlockPlan(
-        blk_slot=np.zeros((n, cap), np.int32),
-        blk_off=np.zeros((n, cap), np.int32),
-        blk_goff=np.zeros((n, cap), np.int32),
-        blk_include=np.zeros((n, cap), np.float32),
-        n_blocks=np.zeros((n,), np.int32),
-        block_rows=block_rows,
-        blk_seg_t=np.full((n, cap), -1, np.int32),
-    )
+    bp = _empty_block_plan(n, cap, block_rows, width)
     for w in range(n):
-        for i, (slot, off, goff, use, t) in enumerate(lists[w]):
+        for i, (slot, off, goff, use, t, sid) in enumerate(lists[w]):
             bp.blk_slot[w, i] = slot
             bp.blk_off[w, i] = off
             bp.blk_goff[w, i] = goff
             bp.blk_include[w, i] = use
             bp.blk_seg_t[w, i] = t
+            if prio.size:
+                bp.blk_prio[w, i] = prio[sid]
         bp.n_blocks[w] = len(lists[w])
     return bp
 
@@ -191,9 +295,126 @@ def refresh_include(
     return out
 
 
+def device_include_weights(
+    blk_prio: jnp.ndarray, blk_valid: jnp.ndarray, bad: jnp.ndarray
+) -> jnp.ndarray:
+    """In-graph twin of :func:`refresh_include`: (N, B) combine weights from
+    a straggler bitmask.
+
+    For every block, the winner is the first **non-straggling** machine in
+    the segment's combine-priority order (the paper's first-arrival master
+    semantics, exactly :meth:`CompiledPlan.include_mask`); the block's weight
+    is 1.0 iff this worker is that winner. Pure gather/compare on (N, B, 1+S)
+    arrays, so per-step straggler churn inside a fused window is device data,
+    never a host round-trip.
+
+    Args:
+      blk_prio: (N, B, 1+S) int32, -1 on padding (:attr:`BlockPlan.blk_prio`).
+      blk_valid: (N, B) bool — real (non-padding) blocks.
+      bad: (N,) bool — straggler bitmask over the machine population.
+
+    The caller must have validated feasibility (some non-straggler per
+    segment) host-side; with a dead segment this returns winner = its
+    highest-priority holder instead of raising.
+    """
+    ok = jnp.logical_not(bad[jnp.clip(blk_prio, 0, None)])     # (N, B, L)
+    first = jnp.argmax(ok, axis=-1)                            # first alive
+    winner = jnp.take_along_axis(
+        blk_prio, first[..., None], axis=-1)[..., 0]           # (N, B)
+    ids = jnp.arange(blk_prio.shape[0], dtype=blk_prio.dtype)[:, None]
+    return ((winner == ids) & blk_valid).astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------- #
-# The jitted executor
+# The jitted executors
 # ---------------------------------------------------------------------- #
+def _default_matmul(xb, wb):
+    return jnp.dot(
+        xb.astype(jnp.float32), wb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _make_worker_body(
+    worker_axis: str,
+    rows_total: int,
+    block_rows: int,
+    mm: Callable,
+    out_cols: Optional[int],
+    segmented_fn: Optional[Callable],
+):
+    """The per-worker, per-step computation shared by the stepwise and fused
+    executors — ONE definition so the two drivers are the same compiled math.
+
+    With ``segmented_fn`` the per-block ``fori_loop`` is replaced by one
+    whole-block-list call (the segment-aware kernel path): ``segmented_fn``
+    returns the (B, block_rows, cols) compact partials, which are
+    scatter-added into the output rows. Per-worker output rows are disjoint
+    (each worker computes an assigned row once), so add equals the loop's
+    overwrite; padding blocks carry include == 0 and add exact zeros.
+    """
+
+    def body(staged, blk_slot, blk_off, blk_goff, blk_include, n_blocks, w):
+        # Per-worker shapes: staged (1, T, rows_per_tile, r); plan rows (1, B).
+        staged = staged[0]
+        blk_slot, blk_off = blk_slot[0], blk_off[0]
+        blk_goff, blk_include = blk_goff[0], blk_include[0]
+        w2 = w if w.ndim == 2 else w[:, None]
+        cols = w2.shape[1] if out_cols is None else out_cols
+
+        if segmented_fn is not None:
+            def _compute():
+                compact = segmented_fn(staged, blk_slot, blk_off,
+                                       blk_include, w2)
+                rows = (
+                    blk_goff[:, None]
+                    + jnp.arange(block_rows, dtype=jnp.int32)
+                ).reshape(-1)
+                return jnp.zeros((rows_total, cols), jnp.float32) \
+                    .at[rows].add(compact.reshape(-1, cols))
+
+            # Zero-trip workers (preempted machines; inactive padding steps
+            # of a fused window, whose trip counts are zeroed in-graph)
+            # skip the gather+matmul entirely — same contract as the
+            # fori_loop path's zero iteration count.
+            y = jax.lax.cond(
+                n_blocks[0] > 0, _compute,
+                lambda: jnp.zeros((rows_total, cols), jnp.float32))
+        else:
+            y0 = jnp.zeros((rows_total, cols), jnp.float32)
+
+            def step(i, y):
+                xb = jax.lax.dynamic_slice(
+                    staged[blk_slot[i]],
+                    (blk_off[i], 0),
+                    (block_rows, staged.shape[-1]),
+                )
+                yb = mm(xb, w2) * blk_include[i]
+                return jax.lax.dynamic_update_slice(y, yb, (blk_goff[i], 0))
+
+            y = jax.lax.fori_loop(0, n_blocks[0], step, y0)
+        y = jax.lax.psum(y, worker_axis)
+        # A 1-d operand squeezes back to a vector only when the output width
+        # follows the operand; an explicit out_cols keeps its matrix shape.
+        return y if (w.ndim == 2 or out_cols is not None) else y[:, 0]
+
+    return body
+
+
+def _shard(body, mesh, worker_axis):
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(worker_axis), P(worker_axis), P(worker_axis), P(worker_axis),
+            P(worker_axis), P(worker_axis), P(),
+        ),
+        out_specs=P(),
+        axis_names={worker_axis},
+        check_vma=False,
+    )
+
+
 def make_matvec_executor(
     mesh: jax.sharding.Mesh,
     worker_axis: str,
@@ -201,6 +422,7 @@ def make_matvec_executor(
     block_rows: int,
     matmul: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = None,
     out_cols: Optional[int] = None,
+    segmented_fn: Optional[Callable] = None,
 ) -> Callable:
     """Build the jitted USEC row-sharded step for a fixed geometry.
 
@@ -216,47 +438,90 @@ def make_matvec_executor(
     ``tile_compute``), in which case ``out_cols`` pins the static per-row
     output width when it differs from the operand's column count (the
     map-reduce workloads of :mod:`repro.api`).
+
+    ``segmented_fn`` swaps the per-block ``fori_loop`` for the segment-aware
+    whole-block-list path (a workload's ``segmented_fn(mode)`` — the Pallas
+    ``usec_segmented`` kernel on TPU, one gathered flat matmul elsewhere).
     """
-    mm = matmul or (
-        lambda xb, wb: jnp.dot(
-            xb.astype(jnp.float32), wb.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
+    body = _make_worker_body(
+        worker_axis, rows_total, block_rows, matmul or _default_matmul,
+        out_cols, segmented_fn,
+    )
+    return jax.jit(_shard(body, mesh, worker_axis))
+
+
+def make_fused_executor(
+    mesh: jax.sharding.Mesh,
+    worker_axis: str,
+    rows_total: int,
+    block_rows: int,
+    fuse_steps: int,
+    matmul: Optional[Callable] = None,
+    out_cols: Optional[int] = None,
+    update: Optional[Callable] = None,
+    segmented_fn: Optional[Callable] = None,
+) -> Callable:
+    """Build the jitted K-step fused window driver.
+
+    Returns ``window(staged, blk_slot, blk_off, blk_goff, n_blocks,
+    blk_prio, blk_valid, bad, active, w) -> (w_out, ys, ws)``:
+
+      blk_*:  (K, N, B[, 1+S]) int32 / n_blocks (K, N) — PER-STEP plan
+              arrays, so a membership change inside the window is pure
+              data: the runner stacks each step's cached plan and churn
+              never breaks a window (only a plan-cache MISS flushes — its
+              compile then overlaps the in-flight window).
+      bad:    (K, N) bool  — per-step straggler bitmasks
+      active: (K,)   bool  — live steps (a flushed/tail window pads with
+              inactive steps: their trip counts and include weights are
+              zeroed, so the padding costs a psum of zeros and its outputs
+              are discarded — window length is always K and the jit cache
+              stays at ONE entry across churn)
+      w:      the iterate carry, (r,) or (r, c) — donated together with the
+              per-window mask buffers, so successive windows rewrite the
+              same device allocations. Plan stacks are NOT donated: the
+              runner caches them on device per window signature, so a
+              steady-state window re-uploads nothing but masks + carry.
+      ys:     (K, rows_total[, c]) per-step raw outputs
+      ws:     (K, ...) the operand each step consumed (host-side stats /
+              verification replay)
+
+    One dispatch runs K steps: include weights are gathered in-graph from
+    ``bad`` (:func:`device_include_weights`), and ``update`` (the workload's
+    ``fused_update`` hook — e.g. the power-iteration normalize+quantize) is
+    applied on device between steps. The per-step body is byte-for-byte the
+    stepwise executor's body, so a fused window is bitwise-equal to K
+    stepwise dispatches.
+    """
+    body = _make_worker_body(
+        worker_axis, rows_total, block_rows, matmul or _default_matmul,
+        out_cols, segmented_fn,
+    )
+    sharded = _shard(body, mesh, worker_axis)
+    upd = update if update is not None else (lambda y, w: w)
+    del fuse_steps  # geometry is carried by the (K, ...) operands
+
+    def window(staged, blk_slot, blk_off, blk_goff, n_blocks,
+               blk_prio, blk_valid, bad, active, w):
+        def sbody(w, xs):
+            slot_k, off_k, goff_k, nblk_k, prio_k, valid_k, bad_k, act_k = xs
+            include = device_include_weights(prio_k, valid_k, bad_k)
+            # Inactive padding: zero trip counts and weights — the body
+            # degenerates to a psum of zeros instead of real block work.
+            include = include * act_k.astype(include.dtype)
+            nblk_k = nblk_k * act_k.astype(nblk_k.dtype)
+            y = sharded(staged, slot_k, off_k, goff_k, include, nblk_k, w)
+            w_next = upd(y, w)
+            # ... and the padding iterate carries through unchanged (the
+            # update of a zero output may be NaN; jnp.where discards it).
+            w_next = jnp.where(act_k, w_next, w)
+            return w_next, (y, w)
+
+        w_out, (ys, ws) = jax.lax.scan(
+            sbody, w,
+            (blk_slot, blk_off, blk_goff, n_blocks, blk_prio, blk_valid,
+             bad, active),
         )
-    )
+        return w_out, ys, ws
 
-    def body(staged, blk_slot, blk_off, blk_goff, blk_include, n_blocks, w):
-        # Per-worker shapes: staged (1, T, rows_per_tile, r); plan rows (1, B).
-        staged = staged[0]
-        blk_slot, blk_off = blk_slot[0], blk_off[0]
-        blk_goff, blk_include = blk_goff[0], blk_include[0]
-        w2 = w if w.ndim == 2 else w[:, None]
-        cols = w2.shape[1] if out_cols is None else out_cols
-        y0 = jnp.zeros((rows_total, cols), jnp.float32)
-
-        def step(i, y):
-            xb = jax.lax.dynamic_slice(
-                staged[blk_slot[i]],
-                (blk_off[i], 0),
-                (block_rows, staged.shape[-1]),
-            )
-            yb = mm(xb, w2) * blk_include[i]
-            return jax.lax.dynamic_update_slice(y, yb, (blk_goff[i], 0))
-
-        y = jax.lax.fori_loop(0, n_blocks[0], step, y0)
-        y = jax.lax.psum(y, worker_axis)
-        # A 1-d operand squeezes back to a vector only when the output width
-        # follows the operand; an explicit out_cols keeps its matrix shape.
-        return y if (w.ndim == 2 or out_cols is not None) else y[:, 0]
-
-    sharded = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(
-            P(worker_axis), P(worker_axis), P(worker_axis), P(worker_axis),
-            P(worker_axis), P(worker_axis), P(),
-        ),
-        out_specs=P(),
-        axis_names={worker_axis},
-        check_vma=False,
-    )
-    return jax.jit(sharded)
+    return jax.jit(window, donate_argnums=(7, 8, 9))

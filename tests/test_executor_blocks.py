@@ -1,0 +1,134 @@
+"""Block-plan expansion: vectorized vs loop oracle, device include weights.
+
+The vectorized :func:`repro.runtime.executor.block_plan` must be BITWISE
+identical to the original triple loop (kept as
+:func:`~repro.runtime.executor.block_plan_reference`), and the fused
+executor's in-graph include gather
+(:func:`~repro.runtime.executor.device_include_weights`) must reproduce the
+host-side :func:`~repro.runtime.executor.refresh_include` for every
+straggler set a plan tolerates.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cyclic_placement, make_placement, solve_assignment
+from repro.core.plan import compile_plan
+from repro.runtime.executor import (
+    block_plan,
+    block_plan_reference,
+    refresh_include,
+    stage_matrix,
+)
+
+_FIELDS = ("blk_slot", "blk_off", "blk_goff", "blk_include", "n_blocks",
+           "blk_seg_t", "blk_prio")
+
+
+def _random_instance(rng):
+    n = int(rng.integers(3, 7))
+    j = int(rng.integers(2, n + 1))
+    s = int(rng.integers(0, min(2, j - 1) + 1))
+    kind = rng.choice(["cyclic", "man"])
+    p = (cyclic_placement(n, n, j) if kind == "cyclic"
+         else make_placement("man", n, 0, min(j, n - 1) or 1))
+    speeds = np.maximum(rng.exponential(1.0, n), 1e-2)
+    n_avail = int(rng.integers(max(1, n - 2), n + 1))
+    avail = tuple(sorted(
+        rng.choice(n, size=n_avail, replace=False).tolist()))
+    try:
+        if p.restrict(avail).replication < 1 + s:
+            return None
+    except Exception:
+        return None
+    sol = solve_assignment(p, speeds, available=avail, stragglers=s)
+    plan = compile_plan(p, sol, rows_per_tile=96, stragglers=s,
+                        speeds=speeds, row_align=16)
+    x = rng.normal(size=(p.n_tiles * 96, 4)).astype(np.float32)
+    sm = stage_matrix(x, p, 96)
+    bad = (tuple(rng.choice(avail, size=min(s, len(avail)),
+                            replace=False).tolist()) if s else ())
+    return plan, sm, avail, bad, s
+
+
+def test_block_plan_vectorized_bitwise_matches_loop_oracle():
+    rng = np.random.default_rng(7)
+    checked = 0
+    while checked < 60:
+        inst = _random_instance(rng)
+        if inst is None:
+            continue
+        plan, sm, _avail, bad, _s = inst
+        a = block_plan(plan, sm.slot_of, 16, stragglers=bad)
+        b = block_plan_reference(plan, sm.slot_of, 16, stragglers=bad)
+        for f in _FIELDS:
+            assert np.array_equal(getattr(a, f), getattr(b, f)), f
+        assert a.block_rows == b.block_rows
+        checked += 1
+
+
+def test_block_plan_b_max_padding_and_errors():
+    rng = np.random.default_rng(1)
+    inst = None
+    while inst is None:
+        inst = _random_instance(rng)
+    plan, sm, _, _, _ = inst
+    a = block_plan(plan, sm.slot_of, 16)
+    padded = block_plan(plan, sm.slot_of, 16, b_max=a.b_max + 5)
+    ref = block_plan_reference(plan, sm.slot_of, 16, b_max=a.b_max + 5)
+    assert padded.b_max == a.b_max + 5
+    for f in _FIELDS:
+        assert np.array_equal(getattr(padded, f), getattr(ref, f)), f
+    with pytest.raises(ValueError, match="b_max"):
+        block_plan(plan, sm.slot_of, 16, b_max=max(a.n_blocks.max() - 1, 0))
+    with pytest.raises(ValueError, match="divide"):
+        block_plan(plan, sm.slot_of, 7)
+
+
+def test_block_plan_rejects_unaligned_segments():
+    # row_align=1 plans have segments that need not be block-aligned.
+    p = cyclic_placement(3, 3, 2)
+    sol = solve_assignment(p, np.array([1.0, 2.0, 3.0]))
+    plan = compile_plan(p, sol, rows_per_tile=80, row_align=1)
+    x = np.zeros((3 * 80, 4), np.float32)
+    sm = stage_matrix(x, p, 80)
+    assert not np.all(plan.seg_len[plan.seg_len > 0] % 16 == 0)
+    with pytest.raises(ValueError, match="block-aligned"):
+        block_plan(plan, sm.slot_of, 16)
+
+
+def test_device_include_weights_matches_refresh_include():
+    """The fused executor's in-graph gather == the host refresh, for every
+    feasible straggler subset of several random plans."""
+    import itertools
+
+    import jax.numpy as jnp
+
+    from repro.runtime.executor import device_include_weights
+
+    rng = np.random.default_rng(11)
+    checked = 0
+    while checked < 12:
+        inst = _random_instance(rng)
+        if inst is None:
+            continue
+        plan, sm, avail, _bad, s = inst
+        bp = block_plan(plan, sm.slot_of, 16)
+        prio = jnp.asarray(bp.blk_prio)
+        valid = jnp.asarray(bp.blk_seg_t >= 0)
+        n = plan.n_machines
+        subsets = [()] + [
+            c for r in range(1, s + 1)
+            for c in itertools.combinations(avail, r)
+        ]
+        for bad_set in subsets:
+            try:
+                want = refresh_include(bp, plan, bad_set)
+            except RuntimeError:
+                continue  # infeasible subset (lost every holder)
+            mask = np.zeros(n, bool)
+            mask[list(bad_set)] = True
+            got = np.asarray(
+                device_include_weights(prio, valid, jnp.asarray(mask)))
+            assert np.array_equal(got, want), (bad_set, got, want)
+        checked += 1
