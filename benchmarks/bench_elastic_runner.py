@@ -141,6 +141,88 @@ def run_phase(x, s_tol: int, steps: int, seed: int):
     return traj, summary
 
 
+# The async cells measure the first-arrival consume rule under the
+# scheduler lookahead's own default environment model (lognormal jitter
+# sigma=0.3, a straggler-prone fleet) — at the bench's near-noiseless 0.05
+# the slowest worker is barely slower than the rest and there is little
+# barrier to stop paying. Both arrivals run the SAME config, trace, and
+# duration draws; the speedup is purely the consume rule.
+ASYNC_JITTER = 0.3
+
+
+def run_async_cell(x, s_tol: int, steps: int, seed: int):
+    """first vs barrier at tolerance S, same trace/clock: one async cell."""
+    from repro.core import cyclic_placement
+    from repro.core.elastic import MarkovChurnTrace
+    from repro.runtime import (
+        ElasticRunner,
+        RunnerConfig,
+        SyntheticSpeedClock,
+        quantize_unit,
+    )
+
+    placement = cyclic_placement(N_WORKERS, N_WORKERS, 2 + s_tol)
+
+    def one(arrival):
+        runner = ElasticRunner(
+            x, placement,
+            RunnerConfig(block_rows=16, stragglers=s_tol, verify="exact",
+                         arrival=arrival),
+            initial_speeds=BASE_SPEEDS,
+            clock=SyntheticSpeedClock(BASE_SPEEDS, jitter_sigma=ASYNC_JITTER,
+                                      seed=seed),
+        )
+        trace = MarkovChurnTrace(
+            N_WORKERS, p_preempt=0.2, p_arrive=0.6, min_available=1,
+            seed=seed, placement=placement, min_holders=1 + s_tol,
+        )
+        w = quantize_unit(
+            np.random.default_rng(seed + 7).normal(size=x.shape[1]))
+        ys, modeled, straggled = [], [], 0
+        for ev in _markov_events(trace, steps):
+            y, rep = runner.step(w, event=ev)
+            ys.append(np.asarray(y))
+            modeled.append(rep.modeled_completion)
+            straggled += len(rep.straggled)
+            w = quantize_unit(y)
+        return ys, np.asarray(modeled), straggled, runner
+
+    ys_b, mod_b, _, _ = one("barrier")
+    ys_f, mod_f, n_straggled, runner_f = one("first")
+    if runner_f.executor_cache_size != 1:
+        raise AssertionError(
+            f"first-arrival executor recompiled: "
+            f"{runner_f.executor_cache_size} jit entries")
+    if s_tol == 0:
+        # with no straggler budget nothing can be skipped: the per-worker
+        # winner-gather must reproduce the psum barrier bit for bit
+        if not all(np.array_equal(a, b) for a, b in zip(ys_f, ys_b)):
+            raise AssertionError("S=0 first-arrival diverged from barrier")
+    speedup = float(mod_b.sum() / mod_f.sum())
+    if s_tol >= 1 and speedup < 1.15:
+        raise AssertionError(
+            f"S={s_tol} first-arrival speedup {speedup:.3f} < 1.15x")
+    return {
+        "stragglers": s_tol,
+        "steps": steps,
+        "jitter_sigma": ASYNC_JITTER,
+        "barrier": {
+            "arrival": "barrier",
+            "modeled_total_s": float(mod_b.sum()),
+            "modeled_steps_per_sec": float(steps / mod_b.sum()),
+        },
+        "first": {
+            "arrival": "first",
+            "modeled_total_s": float(mod_f.sum()),
+            "modeled_steps_per_sec": float(steps / mod_f.sum()),
+            "realized_stragglers_total": n_straggled,
+            "jit_cache_size": runner_f.executor_cache_size,
+        },
+        "first_vs_barrier_speedup": speedup,
+        "s0_bitwise_equal": bool(s_tol == 0),
+    }
+
+
 def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
         csv: bool = True):
     from repro.runtime import make_exact_matrix
@@ -172,6 +254,20 @@ def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
                   f"waste {summary['total_waste_rows']} rows; "
                   f"jit entries {summary['jit_cache_size']}")
 
+    cells = {}
+    for s_tol in (0, 1):
+        cell = run_async_cell(x, s_tol, steps, seed)
+        cells[f"S{s_tol}"] = cell
+        if csv:
+            tag = f"elastic_runner_async_S{s_tol}"
+            print(f"{tag}_speedup,{cell['first_vs_barrier_speedup']:.3f},"
+                  f"first {cell['first']['modeled_steps_per_sec']:.1f} vs "
+                  f"barrier {cell['barrier']['modeled_steps_per_sec']:.1f} "
+                  f"modeled steps/s at jitter {ASYNC_JITTER}; "
+                  f"{cell['first']['realized_stragglers_total']} realized "
+                  f"stragglers; jit entries "
+                  f"{cell['first']['jit_cache_size']}")
+
     doc = {
         "benchmark": "elastic_runner",
         "n_workers": N_WORKERS,
@@ -179,6 +275,7 @@ def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
         "base_speeds_rows_per_s": BASE_SPEEDS,
         "seed": seed,
         "phases": phases,
+        "async": cells,
     }
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)

@@ -146,6 +146,88 @@ def _run_cell(make_wl, backend, policy, cfg, x, steps, seed, s_tol, clock):
     return entry, res
 
 
+# First-arrival cells run under the lookahead's default environment model
+# (lognormal jitter sigma=0.3): at the timed cells' near-noiseless 0.05
+# there is no barrier worth skipping. Same trace, clock and config for both
+# arrivals — the speedup isolates the consume rule.
+ASYNC_JITTER = 0.3
+
+
+def _run_async_section(x, steps, seed, policy, dev_cfg, sim_cfg, s_tol):
+    """arrival="first" vs "barrier" on both backends (power iteration)."""
+    from dataclasses import replace
+
+    from repro.api import ElasticEngine, MatVecPowerIteration
+    from repro.runtime import SyntheticSpeedClock
+
+    cells = {}
+    for arrival in ("barrier", "first"):
+        engine = ElasticEngine(
+            MatVecPowerIteration(seed=seed), policy,
+            replace(dev_cfg, arrival=arrival), backend="device",
+            n_machines=N_WORKERS,
+            clock=SyntheticSpeedClock(list(BASE_SPEEDS),
+                                      jitter_sigma=ASYNC_JITTER, seed=seed),
+        )
+        engine.run(x, n_steps=1)
+        events = _events(engine.placement, s_tol, steps, seed)
+        t0 = time.perf_counter()
+        res = engine.run(None, n_steps=steps, events=iter(events))
+        wall = time.perf_counter() - t0
+        if arrival == "first" and res.executor_cache_size != 1:
+            raise AssertionError(
+                f"first-arrival executor recompiled "
+                f"({res.executor_cache_size} jit entries)")
+        modeled = float(sum(r.modeled_completion for r in res.reports))
+        cells[arrival] = {
+            "steps": res.n_steps,
+            "wall_s": wall,
+            "modeled_total_s": modeled,
+            "modeled_steps_per_sec": res.n_steps / modeled,
+            "realized_stragglers_total": sum(len(r.straggled)
+                                             for r in res.reports),
+            "jit_cache_size": res.executor_cache_size,
+        }
+    device = {
+        "backend": "device",
+        "stragglers": s_tol,
+        "jitter_sigma": ASYNC_JITTER,
+        **cells,
+        "first_vs_barrier_speedup": (
+            cells["barrier"]["modeled_total_s"]
+            / cells["first"]["modeled_total_s"]),
+    }
+
+    # Simulate backend: the same knob swaps the pricing model ("order" vs
+    # the legacy "coverage"); the ratio is the analytic cost of waiting for
+    # whole workers instead of the idealized per-segment master.
+    sim = {}
+    for arrival in ("barrier", "first"):
+        eng = ElasticEngine(
+            MatVecPowerIteration(seed=seed), policy,
+            replace(sim_cfg, arrival=arrival, jitter_sigma=ASYNC_JITTER),
+            backend="simulate", n_machines=N_WORKERS)
+        res = eng.run(n_steps=steps)
+        sim[arrival] = {
+            "steps": res.n_steps,
+            "completion_model": replace(sim_cfg, arrival=arrival)
+            .completion_model,
+            "mean_completion_s": float(res.completion_times.mean()),
+        }
+    return {
+        "device": device,
+        "simulate": {
+            "backend": "simulate",
+            "stragglers": s_tol,
+            "jitter_sigma": ASYNC_JITTER,
+            **sim,
+            "order_vs_coverage_ratio": (
+                sim["first"]["mean_completion_s"]
+                / sim["barrier"]["mean_completion_s"]),
+        },
+    }
+
+
 def _run_sweep_section(seed):
     """Batched sweep_grid vs the per-cell loop on one grid (draws/sec)."""
     from repro.core import cyclic_placement, man_placement
@@ -238,6 +320,23 @@ def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
             print(f"engine_{wname}_fused_speedup,0,"
                   f"{fused['speedup_vs_stepwise']:.2f}x vs stepwise device")
 
+    async_cells = _run_async_section(x, steps, seed, policy, dev_cfg, cfg,
+                                     s_tol)
+    if csv:
+        dev = async_cells["device"]
+        print(f"engine_async_device,"
+              f"{1e6 * dev['first']['wall_s'] / max(dev['first']['steps'], 1):.1f},"
+              f"first {dev['first']['modeled_steps_per_sec']:.1f} vs barrier "
+              f"{dev['barrier']['modeled_steps_per_sec']:.1f} modeled steps/s "
+              f"({dev['first_vs_barrier_speedup']:.2f}x) at jitter "
+              f"{ASYNC_JITTER}; jit entries "
+              f"{dev['first']['jit_cache_size']}")
+        sim_a = async_cells["simulate"]
+        print(f"engine_async_simulate,0,"
+              f"order/coverage completion ratio "
+              f"{sim_a['order_vs_coverage_ratio']:.3f} over "
+              f"{sim_a['first']['steps']} steps")
+
     sweep = _run_sweep_section(seed)
     if csv:
         print(f"engine_sweep_grid,{1e6 * sweep['wall_s']:.0f},"
@@ -254,6 +353,7 @@ def run(steps: int = 12, seed: int = 0, out: str = "BENCH_engine.json",
         "fuse_steps": FUSE_STEPS,
         "seed": seed,
         "results": results,
+        "async": async_cells,
         "sweep_grid": sweep,
     }
     with open(out, "w") as f:
@@ -332,11 +432,38 @@ def run_smoke(seed: int = 0) -> None:
         f"{dispatches} dispatches for {steps} steps at fuse_steps={K} "
         f"(expected ceil = {math.ceil(steps / K)}): churn broke a window")
     assert fres.churn_events == 2 and len(fres.reports) == steps
+
+    # First-arrival mode: the per-worker dispatch must hold the same
+    # jit-cache-of-1 invariant (worker identity is traced data), derive
+    # realized stragglers from arrival order under a jittery clock, and
+    # the bench JSONs must carry the async cells (their structure is what
+    # downstream tooling reads).
+    first = ElasticEngine(
+        MatVecPowerIteration(seed=seed), policy,
+        replace(cfg, arrival="first"), backend="device",
+        n_machines=N_WORKERS,
+        clock=SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.3,
+                                  seed=seed),
+    )
+    first.run(x, n_steps=1)
+    ares = first.run(None, n_steps=4)
+    assert ares.executor_cache_size == 1, (
+        f"first-arrival jit cache grew to {ares.executor_cache_size}")
+    assert any(r.straggled for r in ares.reports), (
+        "arrival='first' derived no stragglers under jitter 0.3")
+
+    import bench_elastic_runner
+    cell = bench_elastic_runner.run_async_cell(x, 0, 3, seed)
+    assert cell["s0_bitwise_equal"] and cell["first"]["jit_cache_size"] == 1
+    for key in ("first_vs_barrier_speedup", "barrier", "first"):
+        assert key in cell, f"async cell missing {key}"
     print(f"bench-smoke OK: jit_cache_size=1, "
           f"cache-hit replan {max(hits) * 1e6:.0f}us, "
           f"simulate {sres.n_steps}x{cfg.n_draws} draws finite, "
           f"fused {dispatches} dispatches / {steps} steps at K={K} "
-          f"across churn")
+          f"across churn, first-arrival derived "
+          f"{sum(len(r.straggled) for r in ares.reports)} stragglers "
+          f"at jit cache 1, async cells present")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,19 @@ class EngineConfig:
         "auto"/"pallas"/"interpret"/"ref" = the segment-aware whole-list
         path, see :class:`~repro.runtime.elastic_runner.RunnerConfig`).
 
+    Both backends:
+      arrival: the master's consume rule — ``"barrier"`` (legacy, block on
+        every included worker) or ``"first"`` (the paper's first-arrival
+        master: consume the first N_t − S completions, mask the realized
+        stragglers, absorb late durations into the EWMA; see
+        :class:`~repro.runtime.elastic_runner.RunnerConfig`). The simulate
+        backend prices ``"first"`` with the ``"order"`` completion model of
+        :func:`repro.runtime.simulate.simulate_batch` (the (N−S)-th order
+        statistic of worker finish times); ``"barrier"`` keeps the legacy
+        ``"coverage"`` analytic model so existing simulate results stay
+        bitwise-stable. An ``"auto"``-straggler policy's lookahead prices
+        candidates under the same model the runner will execute.
+
     Simulate backend:
       (plans integerize at ``row_align = block_rows`` whenever block_rows
       divides rows_per_tile, and solve with the same lexicographic settings
@@ -100,6 +113,8 @@ class EngineConfig:
     speed_mean: float = 1.0
     jitter_sigma: float = 0.3
     plan_speeds: Optional[Tuple[float, ...]] = None
+    # both
+    arrival: str = "barrier"
 
     def __post_init__(self):
         # Arrays in a frozen dataclass break __eq__/__hash__; normalize.
@@ -109,6 +124,16 @@ class EngineConfig:
                 object.__setattr__(
                     self, name,
                     tuple(float(s) for s in np.asarray(v).ravel()))
+        if self.arrival not in ("barrier", "first"):
+            raise ValueError(
+                f"arrival must be 'barrier' or 'first', got {self.arrival!r}")
+
+    @property
+    def completion_model(self) -> str:
+        """The :func:`simulate_batch` consume model this config prices
+        under: ``"order"`` for first-arrival, the legacy ``"coverage"``
+        for the barrier (bitwise-stable with pre-arrival results)."""
+        return "order" if self.arrival == "first" else "coverage"
 
 
 @dataclass
@@ -238,7 +263,11 @@ class ElasticEngine:
             index collections, or a callable ``(step, membership) ->
             sequence`` evaluated after the step's event applies (device
             backend only; the simulate backend draws stragglers from the
-            policy's environment model instead).
+            policy's environment model instead). ``None`` injects nothing:
+            under ``arrival="first"`` the runner then derives each step's
+            realized set from modeled arrival order; under
+            ``arrival="barrier"`` no copies are masked. A callable may
+            also return ``None`` per step to mean "derive this one".
           operand: step-0 operand override (workloads that own their
             operand ignore it).
         """
@@ -270,6 +299,7 @@ class ElasticEngine:
             plan_cache_size=self.cfg.plan_cache_size,
             fuse_steps=self.cfg.fuse_steps,
             segmented=self.cfg.segmented,
+            arrival=self.cfg.arrival,
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -284,7 +314,7 @@ class ElasticEngine:
             self.policy.resolve_stragglers(
                 runner.scheduler, runner.membership,
                 jitter_sigma=self.cfg.jitter_sigma, seed=self.cfg.seed,
-                commit=True,
+                commit=True, completion=self.cfg.completion_model,
             )
         return runner
 
@@ -314,12 +344,16 @@ class ElasticEngine:
         last = None
         fused = runner.cfg.fuse_steps > 1 and runner.fuse_supported
 
-        def step_bad(i: int, membership) -> Tuple[int, ...]:
+        def step_bad(i: int, membership) -> Optional[Tuple[int, ...]]:
+            # None = "no injection": the runner masks nothing (barrier) or
+            # derives the realized set from arrival order (first).
             if straggler_sets is None:
-                return ()
+                return None
             if callable(straggler_sets):
-                return tuple(straggler_sets(i, membership))
-            return tuple(straggler_sets[i])
+                got = straggler_sets(i, membership)
+                return None if got is None else tuple(got)
+            got = straggler_sets[i]
+            return None if got is None else tuple(got)
 
         if fused:
             # Window loop: up to K steps per dispatch. Events are consumed
@@ -430,7 +464,8 @@ class ElasticEngine:
             sched = self.policy.make_scheduler(placement, rows_per_tile, s_plan)
             S = self.policy.resolve_stragglers(
                 sched, range(N), jitter_sigma=self.cfg.jitter_sigma,
-                seed=self.cfg.seed, commit=False)
+                seed=self.cfg.seed, commit=False,
+                completion=self.cfg.completion_model)
 
         if events is None:
             if n_steps is None:
@@ -455,6 +490,14 @@ class ElasticEngine:
             # so the two backends' EngineResults agree on a shared trace.
             churn += int(ev.is_churn)
             avail_seq.append(tuple(sorted(ev.available)))
+        if n_steps is not None and len(avail_seq) < n_steps:
+            # Backend step-count parity: the device loop consumes at most
+            # one event per step and keeps running on the last membership
+            # once the trace is exhausted — pad identically here, so the
+            # same config + a short trace reports the same n_steps either
+            # way. (n_steps=None still means "to trace exhaustion".)
+            pad = avail_seq[-1] if avail_seq else tuple(range(N))
+            avail_seq.extend([pad] * (n_steps - len(avail_seq)))
 
         index_of: Dict[Tuple[int, ...], int] = {}
         sols: List[AssignmentSolution] = []
@@ -516,7 +559,8 @@ class ElasticEngine:
         realized, _ = draw_scenarios(
             s_plan, T * B, self.cfg.jitter_sigma, rng, range(N))
         timing = simulate_batch(stack, realized, plan_index=plan_index,
-                                on_infeasible="inf")
+                                on_infeasible="inf",
+                                completion=self.cfg.completion_model)
         completion = timing.completion_times.reshape(T, B)
         scale = self.workload.cost_scale()
         if scale != 1.0:

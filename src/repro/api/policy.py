@@ -133,9 +133,14 @@ class Policy:
         jitter_sigma: float = 0.3,
         seed: int = 0,
         commit: bool = True,
+        completion: str = "coverage",
     ) -> int:
         """The effective S for ``available``: the fixed value, or the
-        lookahead's pick (``commit=True`` adopts it on the scheduler)."""
+        lookahead's pick (``commit=True`` adopts it on the scheduler).
+        ``completion`` is the consume model the lookahead prices under —
+        the engine passes ``"order"`` when the runner executes
+        ``arrival="first"`` so the chosen S matches the realized
+        semantics."""
         if not self.auto_stragglers:
             return int(self.stragglers)
         best, _ = scheduler.select_straggler_tolerance(
@@ -148,5 +153,6 @@ class Policy:
             quantile=self.lookahead_quantile,
             seed=seed,
             commit=commit,
+            completion=completion,
         )
         return best

@@ -229,6 +229,7 @@ class USECScheduler:
         quantile: float = 0.95,
         seed: int = 0,
         commit: bool = False,
+        completion: str = "coverage",
     ) -> Tuple[int, Dict[int, float]]:
         """Batched lookahead: pick S from simulated completion distributions.
 
@@ -240,6 +241,11 @@ class USECScheduler:
         completion-time distribution, with infeasible draws (a plan that
         cannot survive the drawn straggler set) counting as +inf — so a
         tolerance below the expected straggler rate is never selected.
+        ``completion`` selects :func:`simulate_batch`'s consume model, so
+        the lookahead prices S under the semantics the runner will actually
+        execute — ``"order"`` for an ``arrival="first"`` runner (the
+        (N−S)-th order statistic), ``"barrier"`` for the bulk-synchronous
+        step, ``"coverage"`` for the legacy idealized per-segment master.
 
         Returns ``(best_S, {S: score})``; candidates the placement cannot
         support (replication < 1+S) are omitted from the scores. With
@@ -276,7 +282,8 @@ class USECScheduler:
                 speeds=s_hat, row_align=self.row_align,
             )
             timing = simulate_batch(plan, realized, dropped=drop,
-                                    on_infeasible="inf")
+                                    on_infeasible="inf",
+                                    completion=completion)
             # Order statistic, not interpolation: +inf draws must surface
             # as +inf scores (interpolating between infs yields NaN).
             scores[int(S)] = float(np.quantile(

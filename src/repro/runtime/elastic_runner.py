@@ -24,6 +24,13 @@ preferred entry point is :class:`repro.api.ElasticEngine` with
 ``backend="device"``; :func:`run_power_iteration` below survives as a thin
 deprecation shim over it.
 
+Two consume rules (``RunnerConfig.arrival``): the legacy ``"barrier"`` step
+blocks on every included worker inside one psum dispatch, while ``"first"``
+is the paper's first-arrival master — per-worker partials dispatched as
+independently fetchable device calls, the first ``N_t - S`` modeled arrivals
+consumed, the realized slowest-S set masked out of a host-side winner-gather
+combine, and every late worker's duration still absorbed into the EWMA.
+
 The static-shape contract: every array is padded to the **max-N membership**
 (the full machine population). A preempted machine is a worker slot with
 ``n_blocks == 0`` and all-zero include weights — its shard runs an empty
@@ -117,6 +124,21 @@ class RunnerConfig:
       CPU). Accumulation order differs from the loop in the last ulp on
       non-exact data (on the integer-grid matrices of the examples and
       parity tests, all paths agree bitwise).
+    arrival: the master's consume rule. ``"barrier"`` (legacy) blocks on
+      every included worker — the psum combine needs all shards.
+      ``"first"`` implements the paper's first-arrival master: workers are
+      dispatched as independently fetchable per-worker partials
+      (:func:`repro.runtime.executor.make_worker_executor`), the master
+      consumes the first ``N_t - S`` completions (modeled arrival order:
+      the clock's durations), the realized slowest-S set is masked out of
+      the combine via the ordinary include weights, and the late workers'
+      durations still feed the EWMA — a straggler is a measurement, not a
+      loss. Modeled completion becomes the (N_t - S)-th order statistic of
+      worker finish times instead of the max. At S=0 every segment has one
+      holder, no arrival can be skipped, and the path reduces to the
+      barrier result bitwise. Composes with ``fuse_steps > 1``: fused
+      windows derive each step's realized set at assembly time and mask it
+      in-graph through the include gather.
     """
 
     block_rows: int = 16
@@ -130,6 +152,7 @@ class RunnerConfig:
     plan_cache_size: Optional[int] = None
     fuse_steps: int = 1
     segmented: Optional[str] = None
+    arrival: str = "barrier"
 
 
 @dataclass
@@ -229,6 +252,8 @@ class _CacheEntry:
     s_plan: np.ndarray                 # estimator state the plan was built under
     block_loads: np.ndarray            # (N,) tile-unit loads derived from blocks
     dev: Tuple                         # (slot, off, goff, include0, n_blocks) on device
+    stragglers: int                    # tolerance S the plan was compiled under
+    dev_valid: "object"                # (N, B) float32 real-block mask on device
 
 
 class ElasticRunner:
@@ -265,8 +290,13 @@ class ElasticRunner:
         from .executor import (
             make_fused_executor,
             make_matvec_executor,
+            make_worker_executor,
             stage_matrix,
         )
+
+        if cfg.arrival not in ("barrier", "first"):
+            raise ValueError(
+                f"arrival must be 'barrier' or 'first', got {cfg.arrival!r}")
 
         if workload is None:
             from repro.api.workload import MatVec
@@ -331,6 +361,17 @@ class ElasticRunner:
             out_cols=workload.out_cols,
             segmented_fn=seg_fn,
         )
+        # First-arrival mode dispatches per-worker partials instead of the
+        # monolithic psum step; ``widx`` is a traced scalar so ONE compiled
+        # program serves every worker (the jit-cache-of-1 invariant holds).
+        self._worker_exec = None
+        if cfg.arrival == "first":
+            self._worker_exec = make_worker_executor(
+                rows_total=q, block_rows=cfg.block_rows,
+                matmul=workload.executor_fn(cfg.matmul_mode),
+                out_cols=workload.out_cols,
+                segmented_fn=seg_fn,
+            )
         # The fused window driver shares the stepwise per-worker body; the
         # workload's fused_update is the in-graph iterate step. None means
         # the workload cannot fuse (host-side consume with no device twin):
@@ -383,14 +424,20 @@ class ElasticRunner:
         self._window_dev: "OrderedDict[Tuple[int, ...], Tuple[Tuple, Tuple]]" \
             = OrderedDict()
         self._window_dev_cap = 8
-        self.device_dispatches = 0    # executor calls (windows count as 1)
+        self.device_dispatches = 0    # executor calls (windows count as 1,
+                                      # first-arrival counts each worker)
         self.churn_events = 0
         self.plans_compiled = 0       # every solve+compile, incl. speculative
         self.plans_precompiled = 0    # ... of which were neighbor precompiles
         self.plans_evicted = 0        # LRU evictions from the plan cache
         self.cache_hits = 0
+        self.probe_solves = 0         # drift-gate c* pricing solves
         self.precompile_s = 0.0       # host time spent off the critical path
         self.total_waste = 0
+        # Wall estimate for assembly-time clock draws in fused first-arrival
+        # windows (realized sets must be known before dispatch). Clocks that
+        # matter for reproducibility (SyntheticSpeedClock) ignore the wall.
+        self._last_step_wall = 1.0
 
     # ------------------------------------------------------------------ #
     @property
@@ -408,8 +455,11 @@ class ElasticRunner:
     def executor_cache_size(self) -> int:
         """Compiled-program count across the step drivers (expected: 1
         forever — a fused run compiles only the window driver, a stepwise
-        run only the per-step executor; churn is data either way)."""
-        fs = [f for f in (self._executor, self._fused) if f is not None]
+        run only the per-step executor, a first-arrival run only the
+        per-worker partial; churn and worker identity are data either
+        way)."""
+        fs = [f for f in (self._executor, self._fused, self._worker_exec)
+              if f is not None]
         if not all(hasattr(f, "_cache_size") for f in fs):
             return -1
         return int(sum(f._cache_size() for f in fs))
@@ -455,6 +505,9 @@ class ElasticRunner:
         entry = _CacheEntry(
             step_plan=splan, block=bp, include0=bp.blk_include.copy(),
             rows=rows, s_plan=s_plan, block_loads=block_loads, dev=dev,
+            stragglers=int(splan.plan.stragglers),
+            dev_valid=jnp.asarray(
+                (bp.blk_seg_t >= 0).astype(np.float32)),
         )
         self._plan_cache[avail] = entry
         self._plan_cache.move_to_end(avail)
@@ -491,8 +544,20 @@ class ElasticRunner:
         """Memoized planning: returns (entry, cache_hit)."""
         s_hat = self.scheduler.speeds
         entry = self._plan_cache.get(avail)
+        if entry is not None and entry.stragglers != self.scheduler.stragglers:
+            # A mid-run select_straggler_tolerance(commit=True) changed S:
+            # a plan compiled under the old tolerance has the wrong segment
+            # redundancy and must never be served again — evict, recompile.
+            del self._plan_cache[avail]
+            entry = None
         if entry is not None:
             self._plan_cache.move_to_end(avail)
+            if self.scheduler.homogeneous:
+                # Homogeneous planning ignores the EWMA (all-ones speeds),
+                # so estimator drift cannot stale a memoized plan — the
+                # drift gate and its probe solve are pure overhead here.
+                self.cache_hits += 1
+                return entry, True
             drift = self._plan_drift(entry, avail, s_hat)
             if drift <= self.cfg.speed_tolerance:
                 self.cache_hits += 1
@@ -512,6 +577,7 @@ class ElasticRunner:
             # what on-demand planning would have produced. The duplicate
             # ~1ms solve only occurs on genuine-drift steps.)
             c_new = self.scheduler.probe_c_star(avail)
+            self.probe_solves += 1
             old_c = entry.step_plan.solution.time_of(self.scheduler.plan_speeds)
             if old_c <= (1.0 + self.cfg.speed_tolerance) * c_new + 1e-12:
                 entry.s_plan = s_hat
@@ -592,18 +658,172 @@ class ElasticRunner:
             self.plans_precompiled += 1
         return len(todo)
 
+    def _check_straggler_ids(self, stragglers: Sequence[int]) -> None:
+        """Reject out-of-range straggler ids in EVERY driver. Historically
+        the stepwise path passed them through (a phantom id was a silent
+        no-op in ``include_mask``) while the fused window filtered them
+        before building its bitmask — the same typo behaved differently
+        per driver. Both now land here."""
+        N = self.placement.n_machines
+        for s in stragglers:
+            if not 0 <= int(s) < N:
+                raise ValueError(
+                    f"straggler id {int(s)} out of range: machine ids are "
+                    f"0..{N - 1}")
+
+    def _derive_realized(self, durations: Dict[int, float]) -> Tuple[int, ...]:
+        """Realized straggler set from modeled arrival order: the master
+        consumes the first ``n_loaded - S`` completions, so the slowest S
+        loaded workers (ties broken by id) are this step's stragglers. At
+        least one worker is always consumed."""
+        S = self.scheduler.stragglers
+        loaded = sorted(durations)
+        s_eff = min(S, max(len(loaded) - 1, 0))
+        if s_eff <= 0:
+            return ()
+        order = sorted(loaded, key=lambda n: (durations[n], n))
+        return tuple(sorted(int(n) for n in order[len(order) - s_eff:]))
+
+    def _winner_combine(
+        self,
+        parts: List[np.ndarray],
+        loaded: List[int],
+        entry: _CacheEntry,
+        include: np.ndarray,
+    ) -> np.ndarray:
+        """Host-side first-arrival combine: gather each output row from its
+        winning holder's partial. ``include`` (the ordinary refresh_include
+        weights) marks exactly one surviving copy per segment, so every row
+        has exactly one contributor — the gather returns the same bits the
+        psum barrier would (the sum of the winner and zeros)."""
+        bp = entry.block
+        win = (include > 0) & (bp.blk_seg_t >= 0)
+        n_idx, b_idx = np.nonzero(win)
+        br = self.cfg.block_rows
+        rows = (
+            bp.blk_goff[n_idx, b_idx][:, None]
+            + np.arange(br, dtype=np.int64)
+        ).reshape(-1)
+        winner = np.full(self.rows_total, -1, dtype=np.int64)
+        winner[rows] = np.repeat(n_idx, br)
+        if (winner < 0).any():  # pragma: no cover - plans cover every row
+            missing = int(np.flatnonzero(winner < 0)[0])
+            raise RuntimeError(
+                f"no surviving holder delivered output row {missing}")
+        pos = np.full(self.placement.n_machines, -1, dtype=np.int64)
+        for i, n in enumerate(loaded):
+            pos[n] = i
+        stack = np.stack(parts)
+        return stack[pos[winner], np.arange(self.rows_total)]
+
+    def _step_first(
+        self,
+        w: np.ndarray,
+        entry: _CacheEntry,
+        cache_hit: bool,
+        replanned: bool,
+        waste: int,
+        t0: float,
+        injected: Optional[Tuple[int, ...]],
+    ) -> Tuple[np.ndarray, StepReport]:
+        """First-arrival step: per-worker dispatch, consume-first combine.
+
+        Every loaded worker's partial is dispatched as its own fetchable
+        device call (unmasked — arrival order is not known yet). The clock
+        then models arrival order; the slowest S loaded workers become the
+        realized straggler set (unless ``injected`` pins one, for tests),
+        the ordinary include weights mask their copies out, and the output
+        is assembled by gathering each row from its winning holder. Late
+        workers are measurements, not losses: every loaded duration feeds
+        the EWMA. Modeled completion is the (n_loaded - S)-th order
+        statistic — the barrier's max only at S=0.
+        """
+        from .executor import refresh_include
+
+        jnp = self._jnp
+        slot_d, off_d, goff_d, _include0_d, nblk_d = entry.dev
+        valid_d = entry.dev_valid
+        replan_s = time.perf_counter() - t0
+
+        loaded = [
+            n for n in self._membership if entry.block.n_blocks[n] > 0
+        ]
+        w_dev = jnp.asarray(w)
+        t1 = time.perf_counter()
+        parts_d = [
+            self._worker_exec(
+                self._staged_dev, np.int32(n), slot_d[n], off_d[n],
+                goff_d[n], valid_d[n], nblk_d[n], w_dev,
+            )
+            for n in loaded
+        ]
+        for p in parts_d:
+            p.block_until_ready()
+        wall = time.perf_counter() - t1
+        self.device_dispatches += len(parts_d)
+        self._last_step_wall = wall
+
+        row_loads = entry.block_loads * self.rows_per_tile
+        durations = self.clock.durations(row_loads, self._membership, wall)
+        realized = (
+            self._derive_realized(durations) if injected is None else injected
+        )
+        # Host-side feasibility + winner weights: include_mask raises when a
+        # segment lost every holder, exactly like the barrier path.
+        include = refresh_include(
+            entry.block, entry.step_plan.plan, realized)
+        y = self._winner_combine(
+            [np.asarray(p) for p in parts_d], loaded, entry, include)
+
+        self._pending_loads = {
+            n: float(entry.block_loads[n]) for n in durations
+        }
+        self._pending_durations = durations
+        skipped = set(realized)
+        consumed = [d for n, d in durations.items() if n not in skipped]
+        modeled = max(consumed) if consumed else 0.0
+
+        if self.cfg.verify:
+            self._verify(y, w)
+
+        self._step += 1
+        report = StepReport(
+            step=self._step,
+            available=self._membership,
+            replanned=replanned,
+            plan_cache_hit=cache_hit,
+            replan_s=replan_s,
+            wall_s=wall,
+            modeled_completion=modeled,
+            straggled=realized,
+            waste=waste,
+            jit_cache_size=self.executor_cache_size,
+            measured=durations,
+            speeds_hat=entry.s_plan,
+        )
+        if self.cfg.precompile_neighbors and not cache_hit:
+            t2 = time.perf_counter()
+            self._precompile_neighbors(self._membership)
+            self.precompile_s += time.perf_counter() - t2
+        return y, report
+
     def step(
         self,
         w: np.ndarray,
         event: Optional[ElasticEvent] = None,
-        stragglers: Sequence[int] = (),
+        stragglers: Optional[Sequence[int]] = None,
     ) -> Tuple[np.ndarray, StepReport]:
         """Execute one elastic step ``y = X @ w`` under the current plan.
 
-        ``event`` (if any) is applied before planning; ``stragglers`` are
-        this step's realized stragglers — their copies are masked out of the
-        combine (include weights), exactly one surviving holder per segment
-        delivers. Raises if the straggler set exceeds the plan's tolerance.
+        ``event`` (if any) is applied before planning. ``stragglers=None``
+        means "no injection": under ``arrival="barrier"`` no copies are
+        masked, under ``arrival="first"`` the realized straggler set is
+        derived from modeled arrival order. An explicit sequence (possibly
+        empty) *injects* that set in either mode — the test/replay hook.
+        Masked copies are dropped from the combine (include weights),
+        exactly one surviving holder per segment delivers. Raises
+        ``ValueError`` on an out-of-range id and errors out if the set
+        exceeds the plan's tolerance.
         """
         from .executor import refresh_include
 
@@ -615,11 +835,19 @@ class ElasticRunner:
         # BEFORE planning, so the plan sees the freshest estimates.
         self.ingest_pending()
         entry, cache_hit, replanned, waste = self._adopt_plan()
+        injected: Optional[Tuple[int, ...]] = None
+        if stragglers is not None:
+            injected = tuple(sorted({int(s) for s in stragglers}))
+            self._check_straggler_ids(injected)
+        if self.cfg.arrival == "first":
+            return self._step_first(
+                w, entry, cache_hit, replanned, waste, t0, injected)
+        bad = injected or ()
         slot_d, off_d, goff_d, include0_d, nblk_d = entry.dev
         include_d = (
-            include0_d if not stragglers
+            include0_d if not bad
             else jnp.asarray(
-                refresh_include(entry.block, entry.step_plan.plan, stragglers))
+                refresh_include(entry.block, entry.step_plan.plan, bad))
         )
         replan_s = time.perf_counter() - t0
 
@@ -631,6 +859,7 @@ class ElasticRunner:
         y.block_until_ready()
         wall = time.perf_counter() - t1
         self.device_dispatches += 1
+        self._last_step_wall = wall
         y = np.asarray(y)
 
         row_loads = entry.block_loads * self.rows_per_tile
@@ -655,7 +884,7 @@ class ElasticRunner:
             replan_s=replan_s,
             wall_s=wall,
             modeled_completion=modeled,
-            straggled=tuple(sorted(int(s) for s in stragglers)),
+            straggled=bad,
             waste=waste,
             jit_cache_size=self.executor_cache_size,
             measured=durations,
@@ -710,10 +939,17 @@ class ElasticRunner:
         entry = self._plan_cache.get(key)
         if entry is None:
             return False
+        if entry.stragglers != self.scheduler.stragglers:
+            # Stale tolerance (see _plan_for): adopting would recompile.
+            return False
+        if self.scheduler.homogeneous:
+            # Membership-only planning: drift cannot stale the entry.
+            return True
         s_hat = self.scheduler.speeds
         if self._plan_drift(entry, key, s_hat) <= self.cfg.speed_tolerance:
             return True
         c_new = self.scheduler.probe_c_star(key)
+        self.probe_solves += 1
         old_c = entry.step_plan.solution.time_of(self.scheduler.plan_speeds)
         return bool(
             old_c <= (1.0 + self.cfg.speed_tolerance) * c_new + 1e-12)
@@ -721,10 +957,16 @@ class ElasticRunner:
     def step_window(
         self,
         w,
-        straggler_sets: Sequence[Sequence[int]] = ((),),
+        straggler_sets: Sequence[Optional[Sequence[int]]] = ((),),
         events: Optional[Sequence[Optional[ElasticEvent]]] = None,
     ):
         """Execute up to ``fuse_steps`` steps in ONE device dispatch.
+
+        A ``None`` entry in ``straggler_sets`` means "no injection" for
+        that step — under ``arrival="first"`` its realized straggler set
+        is derived from modeled arrival order at assembly time (and masked
+        in-graph through the include gather); under ``arrival="barrier"``
+        it is an empty set. Explicit sequences inject, as in :meth:`step`.
 
         The fused fast path. Each active step carries its OWN event,
         straggler set and (cached) plan: the per-step plan arrays are
@@ -761,7 +1003,10 @@ class ElasticRunner:
                 "(workload.fused_update returned None)")
         jnp = self._jnp
         K = self.cfg.fuse_steps
-        sets = [tuple(sorted(int(s) for s in bad)) for bad in straggler_sets]
+        sets = [
+            None if bad is None else tuple(sorted({int(s) for s in bad}))
+            for bad in straggler_sets
+        ]
         n_active = len(sets)
         if not 1 <= n_active <= K:
             raise ValueError(
@@ -787,15 +1032,31 @@ class ElasticRunner:
                 self.apply_event(events[k])
             entry, cache_hit, replanned, waste = self._adopt_plan()
             had_miss = had_miss or not cache_hit
+            durs_k = None
+            if sets[k] is None:
+                if self.cfg.arrival == "first":
+                    # Derive this step's realized stragglers at assembly
+                    # time: the in-graph include gather needs the bitmask
+                    # before dispatch, so the clock is sampled here (once
+                    # per step, in step order — the cadence the stepwise
+                    # path uses) against the previous dispatch's per-step
+                    # wall as the wall estimate.
+                    row_loads = entry.block_loads * self.rows_per_tile
+                    durs_k = self.clock.durations(
+                        row_loads, self._membership, self._last_step_wall)
+                    sets[k] = self._derive_realized(durs_k)
+                else:
+                    sets[k] = ()
+            else:
+                self._check_straggler_ids(sets[k])
             if sets[k]:
                 # Host-side feasibility check (the device gather cannot
                 # raise): include_mask errors out when a segment lost every
                 # holder, exactly like the stepwise path.
                 entry.step_plan.plan.include_mask(sets[k])
-                ids = [int(x) for x in sets[k] if 0 <= int(x) < N]
-                bad[k, ids] = True
+                bad[k, list(sets[k])] = True
             metas.append((self._membership, entry, replanned, cache_hit,
-                          time.perf_counter() - t0, waste))
+                          time.perf_counter() - t0, waste, durs_k))
         # Pad inactive tail slots with the last entry's arrays (masked out
         # in-graph) so the window's shapes never change. The stacked plan
         # buffers are cached ON DEVICE in a small LRU keyed by the
@@ -864,14 +1125,17 @@ class ElasticRunner:
         # window's (possibly different) per-step plans and are reported as
         # ONE measurement at the next window.
         per_step_wall = wall / n_active
+        self._last_step_wall = per_step_wall
         loads_sum: Dict[int, float] = {}
         dur_sum: Dict[int, float] = {}
         per_step_durs = []
         for k in range(n_active):
             entry = metas[k][1]
-            row_loads = entry.block_loads * self.rows_per_tile
-            durs = self.clock.durations(
-                row_loads, metas[k][0], per_step_wall)
+            durs = metas[k][6]
+            if durs is None:
+                row_loads = entry.block_loads * self.rows_per_tile
+                durs = self.clock.durations(
+                    row_loads, metas[k][0], per_step_wall)
             per_step_durs.append(durs)
             for n, d in durs.items():
                 loads_sum[n] = loads_sum.get(n, 0.0) \
@@ -885,10 +1149,18 @@ class ElasticRunner:
                 self._verify(ys[k], ws[k])
 
         reports = []
-        for k, (avail, entry, replanned, cache_hit, replan_s, waste) \
+        for k, (avail, entry, replanned, cache_hit, replan_s, waste, _d) \
                 in enumerate(metas):
             self._step += 1
             durs = per_step_durs[k]
+            if self.cfg.arrival == "first":
+                # First-arrival completion: the master stops at the last
+                # CONSUMED worker — realized stragglers finish later but
+                # are not waited on (their durations still feed the EWMA).
+                skipped = set(sets[k])
+                consumed = [d for n, d in durs.items() if n not in skipped]
+            else:
+                consumed = list(durs.values())
             reports.append(StepReport(
                 step=self._step,
                 available=avail,
@@ -896,7 +1168,7 @@ class ElasticRunner:
                 plan_cache_hit=cache_hit,
                 replan_s=replan_s,
                 wall_s=per_step_wall,
-                modeled_completion=max(durs.values()) if durs else 0.0,
+                modeled_completion=max(consumed) if consumed else 0.0,
                 straggled=sets[k],
                 waste=waste,
                 jit_cache_size=self.executor_cache_size,

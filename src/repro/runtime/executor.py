@@ -17,8 +17,8 @@ Redundant (1+S) blocks are computed by all their holders; the inclusion mask
 The worker axis is *manual* (shard_map) while any other mesh axes stay under
 GSPMD — so the same executor works on (data,) meshes and (data, model) meshes.
 
-Two step drivers share one per-worker body (so their per-step math is the
-same compiled computation, bit for bit):
+Three step drivers share one per-worker math (so their per-step results are
+the same compiled computation, bit for bit):
 
 - :func:`make_matvec_executor` — one dispatch per step (the K=1 path);
 - :func:`make_fused_executor`  — a ``lax.scan`` window of ``fuse_steps``
@@ -26,7 +26,15 @@ same compiled computation, bit for bit):
   workload's ``fused_update`` hook), include masks are computed **in-graph**
   from a per-step straggler bitmask (:func:`device_include_weights`, the
   device-side twin of :func:`refresh_include`), and the iterate carry is
-  donated — so a window costs ONE host round-trip for K steps.
+  donated — so a window costs ONE host round-trip for K steps;
+- :func:`make_worker_executor` — the first-arrival variant: ONE jitted
+  program computing a *single worker's* unmasked partial, dispatched once
+  per available worker. Each dispatch is independently fetchable, so the
+  master can consume completions in arrival order (the paper's "first
+  N_t − S results" semantics) instead of blocking on the collective psum
+  barrier; the combine weights are applied host-side *after* the realized
+  straggler set is known (:meth:`ElasticRunner.step` with
+  ``arrival="first"``).
 """
 
 from __future__ import annotations
@@ -448,6 +456,75 @@ def make_matvec_executor(
         out_cols, segmented_fn,
     )
     return jax.jit(_shard(body, mesh, worker_axis))
+
+
+def make_worker_executor(
+    rows_total: int,
+    block_rows: int,
+    matmul: Optional[Callable] = None,
+    out_cols: Optional[int] = None,
+    segmented_fn: Optional[Callable] = None,
+) -> Callable:
+    """Build the jitted per-worker partial for first-arrival execution.
+
+    Returns ``partial(staged, widx, blk_slot, blk_off, blk_goff,
+    blk_include, n_blocks, w) -> y_n`` where ``staged`` is the full
+    (N, T, rows_per_tile, r) staged matrix, ``widx`` the worker id (a
+    traced scalar — one compiled program serves every worker, so the jit
+    cache stays at 1), and the ``blk_*`` rows are that worker's (B,) plan
+    slices. The output is worker ``widx``'s **unmasked** (rows_total,
+    [c]) partial: every real block contributes with weight 1 (callers pass
+    the valid-block mask as ``blk_include``), because the realized
+    straggler set is not known at dispatch time — first-arrival masking is
+    the master's business, applied host-side per row once arrivals decide
+    the winners (:func:`refresh_include` + a winner gather).
+
+    Unlike the monolithic executors there is no mesh and no collective:
+    each worker's dispatch is an independent device call the master can
+    fetch in completion order. The per-block math (``dynamic_slice`` →
+    ``matmul`` → ``dynamic_update_slice``, or the segmented whole-list
+    path) is the same schedule as :func:`_make_worker_body`, so a
+    first-arrival combine of the winners' rows is bitwise-equal to the
+    barrier psum on the same plan.
+    """
+    mm = matmul or _default_matmul
+
+    def partial_fn(staged, widx, blk_slot, blk_off, blk_goff,
+                   blk_include, n_blocks, w):
+        st = staged[widx]                       # (T, rows_per_tile, r)
+        w2 = w if w.ndim == 2 else w[:, None]
+        cols = w2.shape[1] if out_cols is None else out_cols
+
+        if segmented_fn is not None:
+            def _compute():
+                compact = segmented_fn(st, blk_slot, blk_off,
+                                       blk_include, w2)
+                rows = (
+                    blk_goff[:, None]
+                    + jnp.arange(block_rows, dtype=jnp.int32)
+                ).reshape(-1)
+                return jnp.zeros((rows_total, cols), jnp.float32) \
+                    .at[rows].add(compact.reshape(-1, cols))
+
+            y = jax.lax.cond(
+                n_blocks > 0, _compute,
+                lambda: jnp.zeros((rows_total, cols), jnp.float32))
+        else:
+            y0 = jnp.zeros((rows_total, cols), jnp.float32)
+
+            def step(i, y):
+                xb = jax.lax.dynamic_slice(
+                    st[blk_slot[i]],
+                    (blk_off[i], 0),
+                    (block_rows, st.shape[-1]),
+                )
+                yb = mm(xb, w2) * blk_include[i]
+                return jax.lax.dynamic_update_slice(y, yb, (blk_goff[i], 0))
+
+            y = jax.lax.fori_loop(0, n_blocks, step, y0)
+        return y if (w.ndim == 2 or out_cols is not None) else y[:, 0]
+
+    return jax.jit(partial_fn)
 
 
 def make_fused_executor(

@@ -227,6 +227,7 @@ def simulate_batch(
     dropped=None,
     plan_index: Optional[np.ndarray] = None,
     on_infeasible: str = "raise",
+    completion: str = "coverage",
 ) -> BatchTiming:
     """Vectorized :func:`simulate_step` over a batch of scenario draws.
 
@@ -242,12 +243,31 @@ def simulate_batch(
         infeasible and set its completion time to +inf — the sweep driver's
         mode, where e.g. an S=0 policy is *expected* to fail under forced
         stragglers).
+      completion: the master's consume model.
+        ``"coverage"`` (default, the legacy analytic model): per draw, the
+        time every segment has at least one non-dropped holder finished —
+        max over segments of min over surviving group members. An idealized
+        per-segment master; bit-compatible with :func:`simulate_step`.
+        ``"order"``: the first-arrival runner's rule — the
+        ``(n_active - S)``-th order statistic of the active workers' finish
+        times (dropped workers never arrive), the completion the
+        ``arrival="first"`` runner realizes when it consumes the first
+        ``N_t - S`` results.
+        ``"barrier"``: max over active workers' finish times (dropped →
+        never), what a bulk-synchronous ``arrival="barrier"`` step pays.
+        Both non-default models mark draws whose wait never ends (too many
+        drops) infeasible under ``on_infeasible="inf"``.
 
     Returns:
-      :class:`BatchTiming`. On feasible draws ``completion_times[b]`` equals
+      :class:`BatchTiming`. On feasible draws with ``completion="coverage"``
+      ``completion_times[b]`` equals
       ``simulate_step(plan_b, speeds[b], dropped_b).completion_time`` bit for
       bit.
     """
+    if completion not in ("coverage", "order", "barrier"):
+        raise ValueError(
+            f"completion must be 'coverage', 'order' or 'barrier'; "
+            f"got {completion!r}")
     stack = plan if isinstance(plan, PlanStack) else build_plan_stack([plan])
     N = stack.n_machines
     speeds = np.asarray(speeds, dtype=np.float64)
@@ -273,7 +293,7 @@ def simulate_batch(
     # Group draws by plan: each subset evaluates against its plan's
     # *unpadded* segment table, so small plans in a stack never pay for the
     # largest plan's padding.
-    completion = np.zeros(B)
+    comp = np.zeros(B)
     feasible = np.ones(B, dtype=bool)
     for p in np.unique(pi) if stack.n_plans > 1 else (0,):
         sel = slice(None) if stack.n_plans == 1 else (pi == p)
@@ -294,15 +314,49 @@ def simulate_batch(
                 f"dropped={sorted(np.flatnonzero(drop[b]).tolist())} exceeds "
                 f"the plan's straggler tolerance S={stack.stragglers[p]}"
             )
-        completion[sel] = np.where(
-            feas_p, np.where(lost, -np.inf, seg_time).max(axis=1), np.inf)
+        if completion == "coverage":
+            comp_p = np.where(
+                feas_p, np.where(lost, -np.inf, seg_time).max(axis=1), np.inf)
+        else:
+            # Worker-granular consume rules. A dropped worker never arrives
+            # (finish = +inf); inactive workers are not waited on.
+            act = stack.active[p]                                # (N,)
+            tw = np.where(act[None, :], t[sel], np.inf)          # (B_p, N)
+            tw = np.where(drop[sel] & act[None, :], np.inf, tw)
+            n_act = int(act.sum())
+            if completion == "order":
+                # First-arrival master: wait for the (n_act - S)-th arrival
+                # (never fewer than one).
+                s_p = int(stack.stragglers[p])
+                k = n_act - min(s_p, max(n_act - 1, 0))
+            else:  # "barrier"
+                k = n_act
+            if n_act == 0:  # pragma: no cover - plans always assign work
+                comp_p = np.zeros(tw.shape[0])
+            else:
+                comp_p = np.partition(tw, k - 1, axis=1)[:, k - 1]
+            # Too many drops for the consume rule to ever return: the wait
+            # never completes, on top of the coverage feasibility above.
+            comp_p = np.where(feas_p, comp_p, np.inf)
+            feas_p = feas_p & np.isfinite(comp_p)
+            if not feas_p.all() and on_infeasible == "raise":
+                local = int(np.argmin(feas_p))
+                b = (local if stack.n_plans == 1
+                     else int(np.flatnonzero(sel)[local]))
+                raise RuntimeError(
+                    f"draw {b}: {completion!r} completion never reached; "
+                    f"dropped="
+                    f"{sorted(np.flatnonzero(drop[b]).tolist())} exceeds "
+                    f"the plan's straggler tolerance S={stack.stragglers[p]}"
+                )
+        comp[sel] = comp_p
         feasible[sel] = feas_p
 
     active = stack.active[pi]                                    # (B, N)
-    straggled = active & (drop | (t > completion[:, None] + 1e-15))
+    straggled = active & (drop | (t > comp[:, None] + 1e-15))
     return BatchTiming(
         finish_times=t,
-        completion_times=completion,
+        completion_times=comp,
         feasible=feasible,
         n_straggled=straggled.sum(axis=1),
     )

@@ -91,6 +91,7 @@ def test_simulate_backend_bitwise_matches_legacy_churn_walk():
     assert res.plans_compiled == len(plans)
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_sweep_churn_shim_matches_engine():
     p = cyclic_placement(6, 6, 3)
 
@@ -426,3 +427,52 @@ assert np.array_equal(res4.result, x.astype(np.float64).sum(axis=1))
 print("WORKLOADS-OK", res2.result)
 """, n_devices=4)
     assert "WORKLOADS-OK" in out
+
+
+def test_backends_report_identical_n_steps_on_short_trace():
+    """Step-count parity (regression): with n_steps beyond trace
+    exhaustion, the device loop kept running on the last membership while
+    the simulate backend silently stopped at the last event — the same
+    config reported different n_steps per backend. The simulate side now
+    pads the availability sequence with the final membership."""
+    out = run_with_devices("""
+import numpy as np
+from repro.api import (ElasticEngine, EngineConfig, MatVecPowerIteration,
+                       Policy)
+from repro.core.elastic import scripted_trace
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+BASE = (1000., 1400., 1900., 2600.)
+x = make_exact_matrix(768, 0)
+policy = Policy(placement="cyclic", replication=3, stragglers=1)
+cfg = EngineConfig(block_rows=16, rows_per_tile=192, verify="exact",
+                   n_draws=16, seed=0, initial_speeds=BASE)
+N_STEPS = 8
+script = {0: ((2,), ()), 2: ((), (2,))}   # 3-event trace, then exhausted
+res = {}
+for backend in ("simulate", "device"):
+    eng = ElasticEngine(
+        MatVecPowerIteration(seed=0), policy, cfg, backend=backend,
+        n_machines=4,
+        clock=(SyntheticSpeedClock(list(BASE), jitter_sigma=0.0, seed=0)
+               if backend == "device" else None),
+    )
+    import itertools
+    evs = list(itertools.islice(scripted_trace(4, script), 3))
+    res[backend] = eng.run(x if backend == "device" else None,
+                           n_steps=N_STEPS, events=iter(evs))
+sim, dev = res["simulate"], res["device"]
+assert sim.n_steps == dev.n_steps == N_STEPS, (sim.n_steps, dev.n_steps)
+# the padded tail runs on the trace's final membership on both sides
+assert [s.available for s in sim.steps] == \\
+    [r.available for r in dev.reports]
+assert sim.total_waste == dev.total_waste
+# n_steps=None still means "to trace exhaustion" (no padding)
+eng = ElasticEngine(MatVecPowerIteration(seed=0), policy, cfg,
+                    backend="simulate", n_machines=4)
+import itertools
+evs = list(itertools.islice(scripted_trace(4, script), 3))
+assert eng.run(events=iter(evs)).n_steps == 3
+print("NSTEPS-PARITY-OK")
+""", n_devices=4)
+    assert "NSTEPS-PARITY-OK" in out

@@ -224,3 +224,138 @@ except RuntimeError as e:
     print("TOLERANCE-OK")
 """, n_devices=4)
     assert "TOLERANCE-OK" in out
+
+
+def test_runner_rejects_out_of_range_straggler_ids():
+    """Straggler-id validation (regression): the fused window assembler
+    silently FILTERED out-of-range ids from injected sets while the
+    stepwise path passed them through unvalidated — a typo in a replay
+    script changed semantics without a peep. Both drivers now raise
+    ValueError naming the offending id."""
+    out = run_with_devices("""
+import numpy as np
+from repro.core import cyclic_placement
+from repro.runtime import ElasticRunner, RunnerConfig, quantize_unit
+
+rng = np.random.default_rng(0)
+dim = 4 * 64
+x = rng.integers(-2, 3, size=(dim, dim)).astype(np.float32)
+p = cyclic_placement(4, 4, 3)
+w = quantize_unit(rng.normal(size=dim))
+
+runner = ElasticRunner(x, p, RunnerConfig(block_rows=16, stragglers=1))
+try:
+    runner.step(w, stragglers=(99,))
+    raise SystemExit("stepwise accepted id 99")
+except ValueError as e:
+    assert "99" in str(e) and "0..3" in str(e), e
+try:
+    runner.step(w, stragglers=(-1,))
+    raise SystemExit("stepwise accepted id -1")
+except ValueError as e:
+    assert "-1" in str(e), e
+y, rep = runner.step(w, stragglers=(3,))     # in-range still works
+assert rep.straggled == (3,)
+
+from repro.api.workload import MatVecPowerIteration
+fused = ElasticRunner(
+    x, p, RunnerConfig(block_rows=16, stragglers=1, fuse_steps=2),
+    workload=MatVecPowerIteration())
+try:
+    fused.step_window(w, straggler_sets=[(1,), (99,)])
+    raise SystemExit("fused accepted id 99")
+except ValueError as e:
+    assert "99" in str(e), e
+w2, ys, ws, reps = fused.step_window(w, straggler_sets=[(1,), (3,)])
+assert [r.straggled for r in reps] == [(1,), (3,)]
+print("ID-VALIDATION-OK")
+""", n_devices=4)
+    assert "ID-VALIDATION-OK" in out
+
+
+def test_homogeneous_policy_skips_drift_gate_and_probe_solves():
+    """Homogeneous-mode drift gate (regression): the paper's equal-speed
+    baseline plans ignore the EWMA entirely, yet the runner still priced a
+    fresh c* probe per cached-plan step and re-planned whenever measured
+    speeds drifted — recompiling identical plans. With
+    ``Policy(homogeneous=True)`` the cache must hit on membership alone:
+    zero probe solves under a drifting clock."""
+    out = run_with_devices("""
+import numpy as np
+from repro.api.policy import Policy
+from repro.core import cyclic_placement
+from repro.runtime import (ElasticRunner, RunnerConfig, SyntheticSpeedClock,
+                           make_exact_matrix, quantize_unit)
+
+BASE = [1000.0, 1400.0, 1900.0, 2600.0]
+dim = 4 * 64
+x = make_exact_matrix(dim, 0)
+p = cyclic_placement(4, 4, 2)
+w = quantize_unit(np.random.default_rng(3).normal(size=dim))
+
+def run(policy, jitter):
+    runner = ElasticRunner(
+        x, p, RunnerConfig(block_rows=16, verify="exact",
+                           precompile_neighbors=False),
+        initial_speeds=BASE,
+        clock=SyntheticSpeedClock(BASE, jitter_sigma=jitter, seed=0),
+        policy=policy)
+    for _ in range(6):
+        y, rep = runner.step(w)
+    return runner
+
+homo = run(Policy(stragglers=0, homogeneous=True), jitter=0.5)
+assert homo.probe_solves == 0, homo.probe_solves
+assert homo.plans_compiled == 1, homo.plans_compiled
+# the heterogeneous master DOES pay probes under the same drift — the
+# homogeneous skip is a real savings, not a vacuous counter
+hetero = run(Policy(stragglers=0), jitter=0.5)
+assert hetero.probe_solves > 0, hetero.probe_solves
+print("HOMOGENEOUS-GATE-OK", hetero.probe_solves)
+""", n_devices=4)
+    assert "HOMOGENEOUS-GATE-OK" in out
+
+
+def test_tolerance_recommit_evicts_stale_plans():
+    """Stale-tolerance plan cache (regression): committing a new S via
+    ``select_straggler_tolerance(commit=True)`` cleared the scheduler's
+    previous plan but NOT the runner's plan cache — the next step reused a
+    cached plan compiled under the old S, silently executing with the
+    stale tolerance. Cache entries now record their S and are evicted on
+    mismatch."""
+    out = run_with_devices("""
+import numpy as np
+from repro.core import cyclic_placement
+from repro.runtime import (ElasticRunner, RunnerConfig, SyntheticSpeedClock,
+                           make_exact_matrix, quantize_unit)
+
+BASE = [1000.0, 1400.0, 1900.0, 2600.0]
+dim = 4 * 64
+x = make_exact_matrix(dim, 0)
+p = cyclic_placement(4, 4, 3)          # replication 3: S=1 feasible
+w = quantize_unit(np.random.default_rng(3).normal(size=dim))
+runner = ElasticRunner(
+    x, p, RunnerConfig(block_rows=16, stragglers=0, verify="exact",
+                       precompile_neighbors=False),
+    initial_speeds=BASE,
+    clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0))
+y0, rep0 = runner.step(w)
+assert runner.current_plan.stragglers == 0
+compiled_before = runner.plans_compiled
+# the lookahead re-commits the tolerance mid-run (candidates=(1,) forces
+# a deterministic pick)
+best, _ = runner.scheduler.select_straggler_tolerance(
+    runner.membership, candidates=(1,), n_draws=16,
+    expected_stragglers=1, commit=True)
+assert best == 1 and runner.scheduler.stragglers == 1
+y1, rep1 = runner.step(w)
+# the cached S=0 plan must NOT be reused: fresh S=1 plan, same membership
+assert runner.current_plan.stragglers == 1, runner.current_plan.stragglers
+assert runner.plans_compiled == compiled_before + 1
+assert not rep1.plan_cache_hit
+# ... and the new tolerance actually buys straggler survival
+y2, rep2 = runner.step(w, stragglers=(3,))
+assert np.array_equal(y2, y0)
+print("STALE-S-OK")
+""", n_devices=4)
+    assert "STALE-S-OK" in out

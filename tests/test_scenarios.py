@@ -289,6 +289,7 @@ def test_sweep_grid_reproducible_and_grid_shape_independent():
     assert np.array_equal(a[0].completion_times, same.completion_times)
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_sweep_churn_memoizes_and_accounts_waste():
     p = cyclic_placement(6, 6, 3)
     trace = MarkovChurnTrace(6, p_preempt=0.25, p_arrive=0.6, seed=2,
