@@ -23,6 +23,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
@@ -223,6 +224,106 @@ def run_async_cell(x, s_tol: int, steps: int, seed: int):
     }
 
 
+def run_decentral_cell(x, s_tol: int, steps: int, seed: int):
+    """replan="decentral" vs "central" on the same churn trace: outputs must
+    be bitwise-equal, and the decentralized live path must price a re-plan
+    as a table LOOKUP (dict probe) instead of a solve. The cell reports the
+    lookup latency next to the central planner's cache-hit/miss replan
+    costs, and asserts zero on-demand solves on cached memberships — the
+    steady-state contract the neighbor precompile maintains."""
+    from repro.core import cyclic_placement
+    from repro.core.decentral import DecentralPlanner
+    from repro.core.elastic import MarkovChurnTrace
+    from repro.runtime import (
+        ElasticRunner,
+        RunnerConfig,
+        SyntheticSpeedClock,
+        quantize_unit,
+    )
+
+    placement = cyclic_placement(N_WORKERS, N_WORKERS, 2 + s_tol)
+
+    def one(replan):
+        runner = ElasticRunner(
+            x, placement,
+            RunnerConfig(block_rows=16, stragglers=s_tol, verify="exact",
+                         replan=replan),
+            initial_speeds=BASE_SPEEDS,
+            clock=SyntheticSpeedClock(BASE_SPEEDS, jitter_sigma=0.05,
+                                      seed=seed),
+        )
+        trace = MarkovChurnTrace(
+            N_WORKERS, p_preempt=0.2, p_arrive=0.6, min_available=1,
+            seed=seed, placement=placement, min_holders=1 + s_tol,
+        )
+        w = quantize_unit(
+            np.random.default_rng(seed + 7).normal(size=x.shape[1]))
+        ys, reports = [], []
+        for ev in _markov_events(trace, steps):
+            y, rep = runner.step(w, event=ev)
+            ys.append(np.asarray(y))
+            reports.append(rep)
+            w = quantize_unit(y)
+        return ys, reports, runner
+
+    ys_c, reps_c, _ = one("central")
+    ys_d, _, runner_d = one("decentral")
+    if not all(np.array_equal(a, b) for a, b in zip(ys_c, ys_d)):
+        raise AssertionError(
+            "decentral replan diverged bitwise from the central master")
+    if runner_d.executor_cache_size != 1:
+        raise AssertionError(
+            f"decentral executor recompiled: "
+            f"{runner_d.executor_cache_size} jit entries")
+    planner = runner_d.planning_master
+    if not isinstance(planner, DecentralPlanner):
+        raise AssertionError("decentral runner is not planning via a replica")
+
+    # Lookup latency: warm the table for the current membership at the
+    # current snapshot, then replans are pure dict probes — ZERO solves.
+    m = runner_d.membership
+    planner.plan_batch([m])
+    solves_before = planner.on_demand_solves
+    repeat = 50
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        planner.plan_step(m)
+    lookup_s = (time.perf_counter() - t0) / repeat
+    solves_on_cached = planner.on_demand_solves - solves_before
+    if solves_on_cached != 0:
+        raise AssertionError(
+            f"{solves_on_cached} on-demand solves on a cached membership "
+            f"(the lookup path fell back to solving)")
+
+    # On-demand solve latency for the same membership (table cleared each
+    # round) — the cost a cold replica pays, and the denominator of the
+    # lookup-vs-solve budget row in docs/architecture.md.
+    n_solve = 5
+    t0 = time.perf_counter()
+    for _ in range(n_solve):
+        planner.table.clear()
+        planner.plan_step(m)
+    solve_s = (time.perf_counter() - t0) / n_solve
+
+    hit = [r.replan_s for r in reps_c if r.plan_cache_hit]
+    miss = [r.replan_s for r in reps_c
+            if r.replanned and not r.plan_cache_hit]
+    return {
+        "stragglers": s_tol,
+        "steps": steps,
+        "bitwise_equal_to_central": True,
+        "jit_cache_size": runner_d.executor_cache_size,
+        "table_hits": planner.table_hits,
+        "on_demand_solves_total": planner.on_demand_solves,
+        "on_demand_solves_on_cached": solves_on_cached,
+        "table_lookup_s": lookup_s,
+        "on_demand_solve_s": solve_s,
+        "lookup_vs_solve_speedup": solve_s / max(lookup_s, 1e-12),
+        "central_replan_cache_hit_s": float(np.mean(hit)) if hit else None,
+        "central_replan_cache_miss_s": float(np.mean(miss)) if miss else None,
+    }
+
+
 def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
         csv: bool = True):
     from repro.runtime import make_exact_matrix
@@ -268,6 +369,21 @@ def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
                   f"stragglers; jit entries "
                   f"{cell['first']['jit_cache_size']}")
 
+    decentral = run_decentral_cell(x, 1, steps, seed)
+    if csv:
+        print(f"elastic_runner_decentral,"
+              f"{decentral['table_lookup_s'] * 1e6:.1f},"
+              f"table lookup {decentral['table_lookup_s'] * 1e6:.0f}us vs "
+              f"on-demand solve "
+              f"{decentral['on_demand_solve_s'] * 1e6:.0f}us "
+              f"({decentral['lookup_vs_solve_speedup']:.0f}x); central hit "
+              f"{(decentral['central_replan_cache_hit_s'] or 0) * 1e6:.0f}us"
+              f" / miss "
+              f"{(decentral['central_replan_cache_miss_s'] or 0) * 1e6:.0f}us"
+              f"; {decentral['on_demand_solves_on_cached']} solves on "
+              f"cached memberships; bitwise equal to central; jit entries "
+              f"{decentral['jit_cache_size']}")
+
     doc = {
         "benchmark": "elastic_runner",
         "n_workers": N_WORKERS,
@@ -276,6 +392,7 @@ def run(steps: int = 24, seed: int = 0, out: str = "BENCH_elastic_runner.json",
         "seed": seed,
         "phases": phases,
         "async": cells,
+        "decentral": decentral,
     }
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)

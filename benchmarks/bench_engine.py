@@ -452,18 +452,54 @@ def run_smoke(seed: int = 0) -> None:
     assert any(r.straggled for r in ares.reports), (
         "arrival='first' derived no stragglers under jitter 0.3")
 
+    # Decentralized re-planning: a mid-run scheduler kill must not change a
+    # bit vs the central static run above, the jit cache must stay at one
+    # entry, and a warmed plan table must serve cached memberships with
+    # ZERO on-demand solves (the replicated-table steady-state contract).
+    dec = ElasticEngine(
+        MatVecPowerIteration(seed=seed), policy,
+        replace(cfg, replan="decentral"), backend="device",
+        n_machines=N_WORKERS,
+        clock=SyntheticSpeedClock(list(BASE_SPEEDS), jitter_sigma=0.0,
+                                  seed=seed),
+    )
+    dec.run(x, n_steps=1)
+    dres = dec.run(None, n_steps=3, kill_scheduler_at=1)
+    assert dec.runner.scheduler_killed, "fault injection did not land"
+    assert dres.executor_cache_size == 1, (
+        f"decentral jit cache grew to {dres.executor_cache_size}")
+    assert np.array_equal(dres.result.eigvec, res.result.eigvec), (
+        "scheduler kill under replan='decentral' changed the output bits")
+    assert dres.result.residuals == res.result.residuals
+    planner = dec.runner.planning_master
+    m = dec.runner.membership
+    planner.plan_batch([m])
+    solves = planner.on_demand_solves
+    planner.plan_step(m)
+    assert planner.on_demand_solves == solves, (
+        "decentral replan solved on-demand for a cached membership")
+
     import bench_elastic_runner
     cell = bench_elastic_runner.run_async_cell(x, 0, 3, seed)
     assert cell["s0_bitwise_equal"] and cell["first"]["jit_cache_size"] == 1
     for key in ("first_vs_barrier_speedup", "barrier", "first"):
         assert key in cell, f"async cell missing {key}"
+    dcell = bench_elastic_runner.run_decentral_cell(x, 0, 3, seed)
+    assert dcell["bitwise_equal_to_central"]
+    assert dcell["on_demand_solves_on_cached"] == 0
+    assert dcell["jit_cache_size"] == 1
     print(f"bench-smoke OK: jit_cache_size=1, "
           f"cache-hit replan {max(hits) * 1e6:.0f}us, "
           f"simulate {sres.n_steps}x{cfg.n_draws} draws finite, "
           f"fused {dispatches} dispatches / {steps} steps at K={K} "
           f"across churn, first-arrival derived "
           f"{sum(len(r.straggled) for r in ares.reports)} stragglers "
-          f"at jit cache 1, async cells present")
+          f"at jit cache 1, async cells present, decentral survived a "
+          f"mid-run scheduler kill bitwise with "
+          f"{dcell['on_demand_solves_on_cached']} on-demand solves on "
+          f"cached memberships (lookup "
+          f"{dcell['table_lookup_s'] * 1e6:.0f}us vs solve "
+          f"{dcell['on_demand_solve_s'] * 1e6:.0f}us)")
 
 
 if __name__ == "__main__":

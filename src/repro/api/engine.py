@@ -79,6 +79,14 @@ class EngineConfig:
         ``"coverage"`` analytic model so existing simulate results stay
         bitwise-stable. An ``"auto"``-straggler policy's lookahead prices
         candidates under the same model the runner will execute.
+      replan: re-planning authority on the device backend — ``"central"``
+        (the Algorithm-1 master) or ``"decentral"`` (the pure local rule
+        over replicated state; see
+        :class:`~repro.runtime.elastic_runner.RunnerConfig`). Either this
+        knob or ``Policy(replan="decentral")`` opts in; plans and outputs
+        are bitwise-identical either way, but only the decentral mode
+        survives :meth:`ElasticEngine.run`'s ``kill_scheduler_at`` fault
+        injection. The simulate backend plans statelessly and ignores it.
 
     Simulate backend:
       (plans integerize at ``row_align = block_rows`` whenever block_rows
@@ -115,6 +123,7 @@ class EngineConfig:
     plan_speeds: Optional[Tuple[float, ...]] = None
     # both
     arrival: str = "barrier"
+    replan: str = "central"
 
     def __post_init__(self):
         # Arrays in a frozen dataclass break __eq__/__hash__; normalize.
@@ -127,6 +136,10 @@ class EngineConfig:
         if self.arrival not in ("barrier", "first"):
             raise ValueError(
                 f"arrival must be 'barrier' or 'first', got {self.arrival!r}")
+        if self.replan not in ("central", "decentral"):
+            raise ValueError(
+                f"replan must be 'central' or 'decentral', got "
+                f"{self.replan!r}")
 
     @property
     def completion_model(self) -> str:
@@ -247,6 +260,7 @@ class ElasticEngine:
         events: Optional[Iterable[ElasticEvent]] = None,
         straggler_sets=None,
         operand: Optional[np.ndarray] = None,
+        kill_scheduler_at: Optional[int] = None,
     ) -> EngineResult:
         """Drive one elastic run through ``events``.
 
@@ -270,12 +284,24 @@ class ElasticEngine:
             also return ``None`` per step to mean "derive this one".
           operand: step-0 operand override (workloads that own their
             operand ignore it).
+          kill_scheduler_at: fault injection (device backend only) — kill
+            the central scheduler immediately BEFORE planning step index
+            ``kill_scheduler_at`` of this run. Under
+            ``replan="decentral"`` the run carries to completion on the
+            replicated local rule with outputs bitwise-equal to the
+            uninterrupted run; under ``replan="central"`` the next plan
+            raises :class:`~repro.core.decentral.SchedulerKilledError`.
         """
         if self.backend == "device":
             if n_steps is None:
                 raise ValueError("the device backend needs an explicit n_steps")
             return self._run_device(data, int(n_steps), events,
-                                    straggler_sets, operand)
+                                    straggler_sets, operand,
+                                    kill_scheduler_at)
+        if kill_scheduler_at is not None:
+            raise ValueError(
+                "kill_scheduler_at is a device-backend fault injection; "
+                "the simulate backend has no live scheduler to kill")
         return self._run_simulate(n_steps, events)
 
     # ------------------------------------------------------------------ #
@@ -300,6 +326,7 @@ class ElasticEngine:
             fuse_steps=self.cfg.fuse_steps,
             segmented=self.cfg.segmented,
             arrival=self.cfg.arrival,
+            replan=self.cfg.replan,
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -312,14 +339,14 @@ class ElasticEngine:
         )
         if self.policy.auto_stragglers:
             self.policy.resolve_stragglers(
-                runner.scheduler, runner.membership,
+                runner.planning_master, runner.membership,
                 jitter_sigma=self.cfg.jitter_sigma, seed=self.cfg.seed,
                 commit=True, completion=self.cfg.completion_model,
             )
         return runner
 
     def _run_device(self, data, n_steps, events, straggler_sets,
-                    operand) -> EngineResult:
+                    operand, kill_scheduler_at=None) -> EngineResult:
         if self._runner is None:
             self._runner = self._build_runner(data)
         elif data is not None:
@@ -343,6 +370,11 @@ class ElasticEngine:
         reports: List = []
         last = None
         fused = runner.cfg.fuse_steps > 1 and runner.fuse_supported
+        kill_at = None if kill_scheduler_at is None else int(kill_scheduler_at)
+        if kill_at is not None and not 0 <= kill_at < n_steps:
+            raise ValueError(
+                f"kill_scheduler_at={kill_at} outside this run's step range "
+                f"[0, {n_steps})")
 
         def step_bad(i: int, membership) -> Optional[Tuple[int, ...]]:
             # None = "no injection": the runner masks nothing (barrier) or
@@ -373,6 +405,10 @@ class ElasticEngine:
             w_carry = w
             i = 0
             while i < n_steps:
+                if (kill_at is not None and i >= kill_at
+                        and not runner.scheduler_killed):
+                    runner.kill_scheduler(
+                        f"fault injection before step {kill_at}")
                 # Fold the previous window's measurements into the EWMA
                 # BEFORE assembling this one, so plan_is_ready (the flush
                 # rule below) and the in-window _plan_for judge drift
@@ -389,6 +425,11 @@ class ElasticEngine:
                 sets = [step_bad(i, membership)]
                 j = i + 1
                 while j < n_steps and len(sets) < K:
+                    if j == kill_at:
+                        # End the window here so the kill lands at the next
+                        # window's head — exactly before step kill_at plans,
+                        # matching the stepwise driver's injection point.
+                        break
                     ev_j = next(ev_iter, None) if ev_iter is not None else None
                     if ev_j is not None:
                         new_mem = tuple(sorted(ev_j.available))
@@ -416,6 +457,9 @@ class ElasticEngine:
             w = np.asarray(w_carry)
         else:
             for i in range(n_steps):
+                if i == kill_at:
+                    runner.kill_scheduler(
+                        f"fault injection before step {kill_at}")
                 ev = next(ev_iter, None) if ev_iter is not None else None
                 if ev is not None:
                     runner.apply_event(ev)
@@ -436,7 +480,7 @@ class ElasticEngine:
             plans_compiled=runner.plans_compiled - base[2],
             cache_hits=runner.cache_hits - base[3],
             executor_cache_size=runner.executor_cache_size,
-            stragglers=runner.scheduler.stragglers,
+            stragglers=runner.planning_master.stragglers,
         )
 
     # ------------------------------------------------------------------ #

@@ -56,6 +56,13 @@ class Policy:
       gamma: EWMA mixing factor of the speed estimator.
       homogeneous: plan as if all speeds were equal (the paper's Fig. 4
         baseline).
+      replan: who makes the re-planning decision — ``"central"`` (the
+        Algorithm-1 master, a single point of failure) or ``"decentral"``
+        (every worker evaluates the pure local rule of
+        :mod:`repro.core.decentral` over replicated state; the live path
+        is a plan-table lookup keyed by membership bitmask, bitwise-equal
+        to the central solver, and the run survives a mid-run scheduler
+        kill).
     """
 
     placement: str = "cyclic"
@@ -71,6 +78,7 @@ class Policy:
     waste_epsilon: float = 0.0
     gamma: float = 0.5
     homogeneous: bool = False
+    replan: str = "central"
 
     def __post_init__(self):
         if isinstance(self.stragglers, str):
@@ -80,6 +88,10 @@ class Policy:
                     f"{self.stragglers!r}")
         elif int(self.stragglers) < 0:
             raise ValueError("stragglers must be >= 0")
+        if self.replan not in ("central", "decentral"):
+            raise ValueError(
+                f"replan must be 'central' or 'decentral', got "
+                f"{self.replan!r}")
 
     # ------------------------------------------------------------------ #
     @property
@@ -112,9 +124,25 @@ class Policy:
         initial_speeds: Sequence[float],
         row_align: int = 1,
         t_max: Optional[int] = None,
+        kind: Optional[str] = None,
     ) -> USECScheduler:
-        """The Algorithm 1 master this policy configures."""
-        return USECScheduler(
+        """The Algorithm 1 master this policy configures.
+
+        ``kind`` overrides the planner class: ``"central"`` builds the
+        classic :class:`USECScheduler`, ``"decentral"`` a
+        :class:`~repro.core.decentral.DecentralPlanner` (same interface,
+        same bits, master-less live path). None follows ``self.replan``.
+        """
+        kind = self.replan if kind is None else kind
+        if kind not in ("central", "decentral"):
+            raise ValueError(
+                f"kind must be 'central' or 'decentral', got {kind!r}")
+        cls = USECScheduler
+        if kind == "decentral":
+            from repro.core.decentral import DecentralPlanner
+
+            cls = DecentralPlanner
+        return cls(
             placement,
             rows_per_tile=rows_per_tile,
             initial_speeds=np.asarray(initial_speeds, dtype=np.float64),

@@ -9,9 +9,22 @@ Layers (all pure host-side, consumed by the jitted runtime as arrays):
   speed       — EWMA heterogeneous-speed estimation (Algorithm 1)
   elastic     — availability traces, membership events, transition waste
   scheduler   — the adaptive master loop tying it all together
+  decentral   — the master-less re-planning rule (pure local function +
+                replicated plan table), bitwise-equal to the scheduler
 """
 
 from .assignment import AssignmentSolution, lower_bound, solve_assignment
+from .decentral import (
+    DeadScheduler,
+    DecentralPlanner,
+    PlanTable,
+    SchedulerKilledError,
+    SpeedSnapshot,
+    bitmask_members,
+    local_replan,
+    local_replan_batch,
+    membership_bitmask,
+)
 from .elastic import (
     AvailabilityTrace,
     ElasticEvent,
@@ -42,23 +55,32 @@ __all__ = [
     "AssignmentSolution",
     "AvailabilityTrace",
     "CompiledPlan",
+    "DeadScheduler",
+    "DecentralPlanner",
     "ElasticEvent",
     "LostTileError",
     "MarkovChurnTrace",
     "Placement",
+    "PlanTable",
+    "SchedulerKilledError",
     "Segment",
     "SpeedEstimator",
+    "SpeedSnapshot",
     "StepPlan",
     "TileAssignment",
     "USECScheduler",
+    "bitmask_members",
     "compile_plan",
     "custom_placement",
     "cyclic_placement",
     "fill_assignment",
     "homogeneous_assignment",
     "integerize_fractions",
+    "local_replan",
+    "local_replan_batch",
     "lower_bound",
     "make_placement",
+    "membership_bitmask",
     "man_placement",
     "repetition_placement",
     "scripted_trace",

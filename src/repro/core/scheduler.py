@@ -28,6 +28,19 @@ from .plan import CompiledPlan, compile_plan, compile_plan_batch
 from .speed import SpeedEstimator
 
 
+def derive_t_max(placement: Placement, stragglers: int) -> int:
+    """Static per-worker segment capacity for a (placement, S) pair: bound
+    segments/worker so plans keep one shape across the whole run. Per tile
+    a worker holds, the filling algorithm emits <= N_g segments of which
+    the worker joins a few; a safe, tight-enough bound is (tiles stored) *
+    (2+S) — the extra slot absorbs integerization splits at tile
+    boundaries. Shared by the central master and the decentralized local
+    rule (:func:`repro.core.decentral.local_replan`): both must pad plans
+    to the SAME capacity or bitwise plan identity is lost."""
+    z = placement.storage_sets()
+    return max(len(zn) for zn in z) * (1 + int(stragglers) + 1)
+
+
 @dataclass
 class StepPlan:
     """Everything the runtime needs for one elastic step."""
@@ -78,13 +91,9 @@ class USECScheduler:
         self.t_max = self._derive_t_max() if t_max is None else t_max
 
     def _derive_t_max(self) -> int:
-        """Static per-worker capacity: bound segments/worker so plans keep
-        one shape across the whole run. Per tile a worker holds, the filling
-        algorithm emits <= N_g segments of which the worker joins a few; a
-        safe, tight-enough bound is (tiles stored) * (2+S) — the extra slot
-        absorbs integerization splits at tile boundaries."""
-        z = self.placement.storage_sets()
-        return max(len(zn) for zn in z) * (1 + self.stragglers + 1)
+        """See :func:`derive_t_max` (module-level so the decentralized
+        local rule pads to the identical capacity)."""
+        return derive_t_max(self.placement, self.stragglers)
 
     @property
     def speeds(self) -> np.ndarray:

@@ -138,6 +138,11 @@ def restore_checkpoint(
                 arr = arr.astype(np.dtype(proto.dtype))
         if shard_flat is not None and shard_flat[i] is not None:
             leaves.append(jax.device_put(arr, shard_flat[i]))
+        elif isinstance(proto, np.ndarray):
+            # Host-side prototype: keep the leaf on host, bit-exact.
+            # jnp.asarray would silently downcast float64 to float32 (x64
+            # is off), corrupting e.g. a checkpointed float64 iterate.
+            leaves.append(arr)
         else:
             leaves.append(jax.numpy.asarray(arr))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)

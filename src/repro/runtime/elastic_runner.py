@@ -139,6 +139,17 @@ class RunnerConfig:
       barrier result bitwise. Composes with ``fuse_steps > 1``: fused
       windows derive each step's realized set at assembly time and mask it
       in-graph through the include gather.
+    replan: who makes re-planning decisions on the live path.
+      ``"central"`` (legacy) routes every planning call through the
+      Algorithm-1 master (:attr:`ElasticRunner.scheduler`) — a single
+      point of failure. ``"decentral"`` evaluates the pure local rule of
+      :mod:`repro.core.decentral` over replicated (membership bitmask,
+      versioned speed table, plan table) state instead: plans are
+      bitwise-identical to the central solver's, repeated memberships
+      under an unchanged speed snapshot are pure table lookups, and
+      :meth:`ElasticRunner.kill_scheduler` mid-run does not stop the job.
+      (An explicit ``policy=`` with ``replan="decentral"`` opts in too;
+      either flag wins.)
     """
 
     block_rows: int = 16
@@ -153,6 +164,7 @@ class RunnerConfig:
     fuse_steps: int = 1
     segmented: Optional[str] = None
     arrival: str = "barrier"
+    replan: str = "central"
 
 
 @dataclass
@@ -297,6 +309,10 @@ class ElasticRunner:
         if cfg.arrival not in ("barrier", "first"):
             raise ValueError(
                 f"arrival must be 'barrier' or 'first', got {cfg.arrival!r}")
+        if cfg.replan not in ("central", "decentral"):
+            raise ValueError(
+                f"replan must be 'central' or 'decentral', got "
+                f"{cfg.replan!r}")
 
         if workload is None:
             from repro.api.workload import MatVec
@@ -305,7 +321,8 @@ class ElasticRunner:
         if policy is None:
             from repro.api.policy import Policy
 
-            policy = Policy(stragglers=cfg.stragglers, gamma=cfg.gamma)
+            policy = Policy(stragglers=cfg.stragglers, gamma=cfg.gamma,
+                            replan=cfg.replan)
         self.workload = workload
         self.policy = policy
         self.cfg = cfg
@@ -338,7 +355,32 @@ class ElasticRunner:
             rows_per_tile=self.rows_per_tile,
             initial_speeds=s0 / self.rows_per_tile,
             row_align=cfg.block_rows,
+            kind="central",
         )
+        # The PLANNING MASTER is what the live path (plan adoption, drift
+        # gate, neighbor precompile, EWMA ingest) actually consults. In
+        # central mode it IS the Algorithm-1 scheduler above; in decentral
+        # mode it is one worker's replica of the pure local rule + plan
+        # table (every worker holding the same replicated state would
+        # evaluate identical bits), and the central scheduler becomes a
+        # cold standby that kill_scheduler() can remove without stopping
+        # the run.
+        self.replan_mode = (
+            "decentral"
+            if "decentral" in (cfg.replan, getattr(policy, "replan", "central"))
+            else "central"
+        )
+        if self.replan_mode == "decentral":
+            self._master = policy.make_scheduler(
+                placement,
+                rows_per_tile=self.rows_per_tile,
+                initial_speeds=s0 / self.rows_per_tile,
+                row_align=cfg.block_rows,
+                kind="decentral",
+            )
+        else:
+            self._master = self.scheduler
+        self.scheduler_killed = False
         self.clock = clock if clock is not None else HostSharedClock()
         # Static block capacity: a worker never computes more rows than it
         # stores (segments of one tile are disjoint), so stored-tiles *
@@ -452,6 +494,35 @@ class ElasticRunner:
         return None if self._current is None else self._current.step_plan.plan
 
     @property
+    def planning_master(self):
+        """The object the live path consults for every planning decision:
+        the central :class:`USECScheduler` in ``replan="central"`` mode,
+        a :class:`~repro.core.decentral.DecentralPlanner` replica in
+        ``replan="decentral"`` mode. Telemetry (effective S, speed
+        estimates) must read THIS, not :attr:`scheduler` — after a
+        :meth:`kill_scheduler` the latter is a tombstone."""
+        return self._master
+
+    def kill_scheduler(self, reason: str = "fault injection") -> None:
+        """Kill the central scheduler mid-run (fault injection).
+
+        :attr:`scheduler` is replaced by a tombstone whose every attribute
+        access raises :class:`~repro.core.decentral.SchedulerKilledError`.
+        In ``replan="central"`` mode the planning master IS the scheduler,
+        so the very next planning decision (plan adoption, drift probe,
+        EWMA ingest) fails loudly. In ``replan="decentral"`` mode the live
+        path never touches the master — the run continues on the
+        replicated rule/table, bitwise-identical to an uninterrupted run,
+        and the jit cache is untouched."""
+        from repro.core.decentral import DeadScheduler
+
+        dead = DeadScheduler(reason)
+        if self._master is self.scheduler:
+            self._master = dead
+        self.scheduler = dead
+        self.scheduler_killed = True
+
+    @property
     def executor_cache_size(self) -> int:
         """Compiled-program count across the step drivers (expected: 1
         forever — a fused run compiles only the window driver, a stepwise
@@ -542,9 +613,10 @@ class ElasticRunner:
 
     def _plan_for(self, avail: Tuple[int, ...]) -> Tuple[_CacheEntry, bool]:
         """Memoized planning: returns (entry, cache_hit)."""
-        s_hat = self.scheduler.speeds
+        master = self._master
+        s_hat = master.speeds
         entry = self._plan_cache.get(avail)
-        if entry is not None and entry.stragglers != self.scheduler.stragglers:
+        if entry is not None and entry.stragglers != master.stragglers:
             # A mid-run select_straggler_tolerance(commit=True) changed S:
             # a plan compiled under the old tolerance has the wrong segment
             # redundancy and must never be served again — evict, recompile.
@@ -552,7 +624,7 @@ class ElasticRunner:
             entry = None
         if entry is not None:
             self._plan_cache.move_to_end(avail)
-            if self.scheduler.homogeneous:
+            if master.homogeneous:
                 # Homogeneous planning ignores the EWMA (all-ones speeds),
                 # so estimator drift cannot stale a memoized plan — the
                 # drift gate and its probe solve are pure overhead here.
@@ -576,14 +648,14 @@ class ElasticRunner:
             # own lexicographic settings so every adopted plan is exactly
             # what on-demand planning would have produced. The duplicate
             # ~1ms solve only occurs on genuine-drift steps.)
-            c_new = self.scheduler.probe_c_star(avail)
+            c_new = master.probe_c_star(avail)
             self.probe_solves += 1
-            old_c = entry.step_plan.solution.time_of(self.scheduler.plan_speeds)
+            old_c = entry.step_plan.solution.time_of(master.plan_speeds)
             if old_c <= (1.0 + self.cfg.speed_tolerance) * c_new + 1e-12:
                 entry.s_plan = s_hat
                 self.cache_hits += 1
                 return entry, True
-        splan = self.scheduler.plan_step(avail)
+        splan = master.plan_step(avail)
         entry = self._store_entry(avail, splan, s_hat)
         return entry, False
 
@@ -614,7 +686,7 @@ class ElasticRunner:
         result is already out); infeasible neighbors (a lost tile, or fewer
         than 1+S holders) are skipped. Returns the number of plans added."""
         N = self.placement.n_machines
-        S = self.scheduler.stragglers
+        S = self._master.stragglers
         cur = set(avail)
         cand: List[Tuple[int, ...]] = [
             tuple(x for x in avail if x != n) for n in avail if len(avail) > 1
@@ -644,9 +716,9 @@ class ElasticRunner:
             todo = todo[:budget]
         if not todo:
             return 0
-        s_hat = self.scheduler.speeds
+        s_hat = self._master.speeds
         try:
-            splans = self.scheduler.plan_batch(todo)
+            splans = self._master.plan_batch(todo)
         except Exception:
             # Speculation must never take down a live run: a neighbor whose
             # LP/filling hits a numerical edge is simply not cached (it will
@@ -676,7 +748,7 @@ class ElasticRunner:
         consumes the first ``n_loaded - S`` completions, so the slowest S
         loaded workers (ties broken by id) are this step's stragglers. At
         least one worker is always consumed."""
-        S = self.scheduler.stragglers
+        S = self._master.stragglers
         loaded = sorted(durations)
         s_eff = min(S, max(len(loaded) - 1, 0))
         if s_eff <= 0:
@@ -909,10 +981,10 @@ class ElasticRunner:
         drift against the same estimator state."""
         if not self._pending_durations:
             return
-        self.scheduler.report(self._pending_loads, self._pending_durations)
+        self._master.report(self._pending_loads, self._pending_durations)
         self._measured_ever.update(int(n) for n in self._pending_durations)
         if not self._speed_seeded and self._measured_ever:
-            est = self.scheduler.estimator
+            est = self._master.estimator
             s = est.speeds
             known = sorted(self._measured_ever)
             anchor = float(np.exp(np.mean(np.log(s[known]))))
@@ -935,22 +1007,23 @@ class ElasticRunner:
         genuine-drift step repeats the ~1 ms probe. That duplicate solve
         is confined to churn events with past-tolerance drift, the same
         trade the scheduler's waste-averse path already makes."""
+        master = self._master
         key = tuple(sorted(int(a) for a in avail))
         entry = self._plan_cache.get(key)
         if entry is None:
             return False
-        if entry.stragglers != self.scheduler.stragglers:
+        if entry.stragglers != master.stragglers:
             # Stale tolerance (see _plan_for): adopting would recompile.
             return False
-        if self.scheduler.homogeneous:
+        if master.homogeneous:
             # Membership-only planning: drift cannot stale the entry.
             return True
-        s_hat = self.scheduler.speeds
+        s_hat = master.speeds
         if self._plan_drift(entry, key, s_hat) <= self.cfg.speed_tolerance:
             return True
-        c_new = self.scheduler.probe_c_star(key)
+        c_new = master.probe_c_star(key)
         self.probe_solves += 1
-        old_c = entry.step_plan.solution.time_of(self.scheduler.plan_speeds)
+        old_c = entry.step_plan.solution.time_of(master.plan_speeds)
         return bool(
             old_c <= (1.0 + self.cfg.speed_tolerance) * c_new + 1e-12)
 

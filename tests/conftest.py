@@ -8,6 +8,27 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Session-scoped hypothesis profiles (no-op when hypothesis is absent and
+# the _hypothesis_compat fallback runs instead). "ci" turns the deadline
+# off — CI boxes stall unpredictably and a deadline flake tells us nothing —
+# and prints the reproduction blob/seed on failure; "nightly" additionally
+# raises the example budget (HYPOTHESIS_MAX_EXAMPLES env overrides) for the
+# tier-2 differential sweep. Select with HYPOTHESIS_PROFILE; CI defaults to
+# "ci", local runs to "dev".
+try:
+    from hypothesis import settings as _hyp_settings
+except ModuleNotFoundError:
+    pass
+else:
+    _hyp_settings.register_profile("dev", deadline=None, print_blob=True)
+    _hyp_settings.register_profile("ci", deadline=None, print_blob=True,
+                                   derandomize=True)
+    _hyp_settings.register_profile(
+        "nightly", deadline=None, print_blob=True,
+        max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "400")))
+    _hyp_settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
+
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
     """Run a python snippet in a subprocess with N forced host devices.

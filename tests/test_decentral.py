@@ -1,0 +1,504 @@
+"""Decentralized re-planning: the differential proof and the fault drills.
+
+Two claims are under test, and both are bitwise claims:
+
+1. **The local rule IS the central solver.** ``local_replan`` — the pure
+   function every worker evaluates from replicated (membership bitmask,
+   speed table, S) state — must produce bit-for-bit the plan the central
+   ``USECScheduler`` would have produced, over randomized placements,
+   memberships (including single-survivor and all-but-one-preempted
+   degenerates), speeds and tolerances. The deterministic sweep below runs
+   ``USEC_DIFFERENTIAL_INSTANCES`` (default 200) independent instances;
+   the hypothesis properties fuzz the same contract.
+
+2. **Killing the scheduler changes nothing.** With ``replan="decentral"``
+   the engine finishes a churny run after the central master is killed at
+   ANY churn event index, with outputs bitwise-equal to the uninterrupted
+   central run, the jit cache still at one entry, and first-arrival +
+   fused windows composing (identical realized straggler sets). With
+   ``replan="central"`` the same kill fails loudly
+   (:class:`SchedulerKilledError`), not silently.
+
+Device tests run on forced host devices in a subprocess
+(``conftest.run_with_devices``).
+"""
+
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from conftest import run_with_devices
+from test_plan_batch import _assert_plans_identical, _random_instances
+
+from repro.core import (
+    DeadScheduler,
+    DecentralPlanner,
+    PlanTable,
+    SchedulerKilledError,
+    USECScheduler,
+    bitmask_members,
+    cyclic_placement,
+    local_replan,
+    local_replan_batch,
+    membership_bitmask,
+)
+from repro.core.scheduler import derive_t_max
+
+N_INSTANCES = int(os.environ.get("USEC_DIFFERENTIAL_INSTANCES", "200"))
+
+
+def _assert_step_plans_identical(a, b):
+    """StepPlan-level bitwise identity: same membership, same LP optimum,
+    same load matrix bits, same compiled plan bits."""
+    assert tuple(a.available) == tuple(b.available)
+    assert a.solution.c_star == b.solution.c_star  # bitwise, not approx
+    assert a.solution.mu.tobytes() == b.solution.mu.tobytes()
+    assert a.solution.loads.tobytes() == b.solution.loads.tobytes()
+    _assert_plans_identical(a.plan, b.plan)
+
+
+def _central(p, speeds, S, rpt=96, align=1, **kw):
+    return USECScheduler(p, rows_per_tile=rpt, initial_speeds=speeds,
+                         stragglers=S, row_align=align, **kw)
+
+
+def _decentral(p, speeds, S, rpt=96, align=1, **kw):
+    return DecentralPlanner(p, rows_per_tile=rpt, initial_speeds=speeds,
+                            stragglers=S, row_align=align, **kw)
+
+
+def _random_memberships(rng, p, k):
+    """k random feasible memberships of placement ``p`` (full set first),
+    via the same restrict-trial drops as ``_random_instances``."""
+    n = p.n_machines
+    out = [tuple(range(n))]
+    while len(out) < k:
+        avail = list(range(n))
+        for _ in range(int(rng.integers(0, p.replication))):
+            if len(avail) <= 1:
+                break
+            cand = list(avail)
+            rng.shuffle(cand)
+            for d in cand:
+                trial = tuple(x for x in avail if x != d)
+                try:
+                    p.restrict(trial)
+                except Exception:
+                    continue
+                avail = list(trial)
+                break
+        out.append(tuple(avail))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# 1. The differential proof: local rule ≡ central solver, bit for bit
+# ---------------------------------------------------------------------- #
+def _run_differential(n_instances, seed):
+    rng = np.random.default_rng(seed)
+    done = 0
+    while done < n_instances:
+        batch = int(min(32, n_instances - done))
+        placements, sols, strags, speeds_l = _random_instances(rng, batch)
+        rpt = int(rng.integers(16, 200))
+        align = int(rng.choice([1, 8, 16]))
+        for p, sol, S, speeds in zip(placements, sols, strags, speeds_l):
+            avail = sol.machines
+            a = _central(p, speeds, S, rpt, align).plan_step(avail)
+            mask = membership_bitmask(avail, p.n_machines)
+            b = local_replan(mask, p, speeds, S,
+                             rows_per_tile=rpt, row_align=align)
+            _assert_step_plans_identical(a, b)
+        done += batch
+    return done
+
+
+def test_differential_local_rule_vs_central_solver():
+    """The acceptance sweep: >= N_INSTANCES randomized (placement,
+    membership, speeds, S, rows_per_tile, row_align) instances, every one
+    bitwise-identical between ``local_replan`` and the central master.
+    Deterministic (fixed seed), so a failure names a reproducible case."""
+    assert _run_differential(N_INSTANCES, seed=20260808) == N_INSTANCES
+
+
+@pytest.mark.slow
+def test_differential_local_rule_extended_sweep():
+    """Tier-2 body: the same contract at nightly scale. CI sets
+    USEC_DIFFERENTIAL_INSTANCES high; a second seed decorrelates the
+    sweep from the tier-1 run."""
+    _run_differential(max(N_INSTANCES, 200), seed=977)
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_local_rule_property_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    _run_differential(int(rng.integers(1, 5)), seed=seed)
+
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_local_replan_batch_matches_central_plan_batch(seed):
+    """Stacked evaluation (the table-warming path) ≡ central plan_batch ≡
+    per-mask scalar local_replan, on one placement across memberships."""
+    rng = np.random.default_rng(seed)
+    placements, _, _, speeds_l = _random_instances(rng, 1)
+    p, speeds = placements[0], speeds_l[0]
+    memberships = _random_memberships(rng, p, int(rng.integers(2, 6)))
+    # S must be feasible for EVERY membership in the stack (a lone survivor
+    # cannot tolerate stragglers).
+    s_cap = min(p.restrict(m).replication for m in memberships) - 1
+    S = int(rng.integers(0, s_cap + 1))
+    central = _central(p, speeds, S)
+    masks = [membership_bitmask(m, p.n_machines) for m in memberships]
+    try:
+        a = central.plan_batch(memberships)
+    except ValueError:
+        # Degenerate corner (e.g. MAN with J=N has single-tile storage
+        # sets, so the derived static capacity can undershoot): the rule
+        # must agree with the central solver on the FAILURE too.
+        with pytest.raises(ValueError):
+            local_replan_batch(masks, p, speeds, S, rows_per_tile=96,
+                               t_max=central.t_max)
+        return
+    b = local_replan_batch(masks, p, speeds, S, rows_per_tile=96,
+                           t_max=central.t_max)
+    assert len(a) == len(b) == len(memberships)
+    for x, y, mask in zip(a, b, masks):
+        _assert_step_plans_identical(x, y)
+        scalar = local_replan(mask, p, speeds, S, rows_per_tile=96,
+                              t_max=central.t_max)
+        _assert_step_plans_identical(y, scalar)
+
+
+def test_degenerate_memberships_bitwise():
+    """The corners the paper's elastic model stresses: a single survivor
+    (full replication, everyone else preempted), the minimal feasible
+    membership of a J=3 cyclic placement (J-1 machines gone), and the
+    arrival-only full set."""
+    # Single survivor / all-but-one-preempted need J=N so one machine
+    # still holds every tile; S=0 is the only tolerance a lone worker has.
+    for n in (3, 5):
+        p = cyclic_placement(n, n, n)
+        speeds = np.linspace(1.0, 2.5, n)
+        for survivor in range(n):
+            a = _central(p, speeds, 0).plan_step([survivor])
+            b = local_replan(membership_bitmask([survivor], n), p, speeds, 0,
+                             rows_per_tile=96)
+            _assert_step_plans_identical(a, b)
+            assert b.plan.loads()[survivor] > 0
+    # Minimal feasible membership under partial replication.
+    p = cyclic_placement(6, 6, 3)
+    speeds = np.linspace(0.7, 3.1, 6)
+    for avail in ([0, 1, 3, 4], [2, 3, 4, 5], list(range(6))):
+        for S in range(p.restrict(tuple(avail)).replication):
+            a = _central(p, speeds, S).plan_step(avail)
+            b = local_replan(membership_bitmask(avail, 6), p, speeds, S,
+                             rows_per_tile=96)
+            _assert_step_plans_identical(a, b)
+
+
+def test_homogeneous_mode_matches_central():
+    p = cyclic_placement(5, 5, 3)
+    speeds = np.array([1.0, 1.4, 1.9, 2.6, 3.1])
+    a = _central(p, speeds, 1, homogeneous=True).plan_step([0, 1, 3, 4])
+    b = local_replan(membership_bitmask([0, 1, 3, 4], 5), p, speeds, 1,
+                     rows_per_tile=96, homogeneous=True)
+    _assert_step_plans_identical(a, b)
+
+
+# ---------------------------------------------------------------------- #
+# 2. Bitmask canonicalization
+# ---------------------------------------------------------------------- #
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_bitmask_roundtrip_order_and_duplicate_insensitive(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 20))
+    members = sorted(rng.choice(n, size=int(rng.integers(1, n + 1)),
+                                replace=False).tolist())
+    shuffled = list(members) + [members[0]]  # duplicate
+    rng.shuffle(shuffled)
+    mask = membership_bitmask(shuffled, n)
+    assert mask == membership_bitmask(members, n)
+    assert bitmask_members(mask, n) == tuple(members)
+
+
+def test_bitmask_validation():
+    with pytest.raises(ValueError):
+        membership_bitmask([0, 4], 4)       # id out of range
+    with pytest.raises(ValueError):
+        membership_bitmask([-1], 4)
+    with pytest.raises(ValueError):
+        bitmask_members(1 << 4, 4)          # bit beyond the population
+    with pytest.raises(ValueError):
+        bitmask_members(-1, 4)
+    assert bitmask_members(0, 4) == ()
+    assert membership_bitmask([], 4) == 0
+
+
+# ---------------------------------------------------------------------- #
+# 3. Replicated state: the plan table's stamp discipline
+# ---------------------------------------------------------------------- #
+def test_plan_table_serves_only_under_matching_stamp():
+    p = cyclic_placement(4, 4, 2)
+    speeds = np.ones(4)
+    sp = local_replan(0b1111, p, speeds, 1, rows_per_tile=96)
+    t = PlanTable()
+    assert len(t) == 0 and 0b1111 not in t
+    t.insert(0b1111, sp, version=3, stragglers=1, t_max=derive_t_max(p, 1))
+    assert len(t) == 1 and 0b1111 in t
+    tm = derive_t_max(p, 1)
+    assert t.lookup(0b1111, 3, 1, tm) is sp
+    # Any stamp component drifting invalidates silently:
+    assert t.lookup(0b1111, 4, 1, tm) is None      # speed broadcast landed
+    assert t.lookup(0b1111, 3, 2, tm) is None      # S re-committed
+    assert t.lookup(0b1111, 3, 1, tm + 4) is None  # capacity re-derived
+    assert t.lookup(0b0111, 3, 1, tm) is None      # different membership
+    t.clear()
+    assert len(t) == 0
+
+
+def test_planner_lockstep_parity_hits_and_version_bumps():
+    """A DecentralPlanner and a central USECScheduler fed the identical
+    (membership, measurement) sequence stay bitwise in lockstep — and the
+    decentral live path degrades to pure lookups wherever the snapshot
+    version is unchanged."""
+    p = cyclic_placement(4, 4, 3)
+    speeds = np.array([1.0, 1.4, 1.9, 2.6])
+    central = _central(p, speeds, 1)
+    dec = _decentral(p, speeds, 1)
+    assert dec.speed_table_version == 0
+
+    full = (0, 1, 2, 3)
+    down = (0, 1, 3)
+    loads = {n: 96.0 for n in full}
+    durs = {0: 0.10, 1: 0.07, 2: 0.05, 3: 0.04}
+
+    # Same version epoch: full, full (hit), down, full (hit), down (hit).
+    seq = [full, full, down, full, down]
+    for avail in seq:
+        _assert_step_plans_identical(dec.plan_step(avail),
+                                     central.plan_step(avail))
+    assert dec.on_demand_solves == 2          # full, down — solved once each
+    assert dec.table_hits == 3
+    assert dec.speed_table_version == 0
+
+    # A broadcast bumps the version and invalidates every entry.
+    central.report(loads, durs)
+    dec.report(loads, durs)
+    assert dec.speed_table_version == 1
+    assert dec.snapshot().version == 1
+    assert dec.snapshot().speeds.tobytes() == central.speeds.tobytes()
+    _assert_step_plans_identical(dec.plan_step(full), central.plan_step(full))
+    assert dec.on_demand_solves == 3          # stale stamp forced a solve
+    # ... and the re-stamped entry serves again.
+    _assert_step_plans_identical(dec.plan_step(full), central.plan_step(full))
+    assert dec.table_hits == 4
+    # Step counters never diverged (StepPlan.step is part of the contract).
+    assert dec.plan_step(down).step == central.plan_step(down).step
+
+
+def test_plan_batch_warms_table_for_zero_solve_churn():
+    """The runner's speculative neighbor precompile goes through
+    plan_batch; churn onto a precompiled membership must then be a pure
+    lookup — ZERO on-demand solves (the bench smoke's tripwire)."""
+    p = cyclic_placement(4, 4, 3)
+    dec = _decentral(p, np.array([1.0, 1.4, 1.9, 2.6]), 1)
+    central = _central(p, np.array([1.0, 1.4, 1.9, 2.6]), 1)
+    neighbors = [(0, 1, 2, 3), (0, 1, 2), (0, 1, 3), (0, 2, 3), (1, 2, 3)]
+    batch_d = dec.plan_batch(neighbors)
+    batch_c = central.plan_batch(neighbors)
+    for x, y in zip(batch_c, batch_d):
+        _assert_step_plans_identical(x, y)
+    assert len(dec.table) == len(neighbors)
+    assert dec.on_demand_solves == 0
+    for avail in [(0, 1, 3), (1, 2, 3), (0, 1, 2, 3)]:
+        _assert_step_plans_identical(dec.plan_step(avail),
+                                     central.plan_step(avail))
+    assert dec.on_demand_solves == 0          # every churn was a lookup
+    assert dec.table_hits == 3
+
+
+def test_straggler_commit_invalidates_table():
+    """select_straggler_tolerance(commit=True) changes S AND re-derives
+    t_max; both are stamp components, so cached plans must never be served
+    across the commit."""
+    p = cyclic_placement(5, 5, 3)
+    speeds = np.array([1.0, 1.4, 1.9, 2.6, 3.1])
+    dec = _decentral(p, speeds, 0)
+    full = tuple(range(5))
+    dec.plan_step(full)
+    assert dec.on_demand_solves == 1
+    best, _ = dec.select_straggler_tolerance(full, candidates=(2,),
+                                             commit=True)
+    assert best == 2 and dec.stragglers == 2
+    assert dec.t_max == derive_t_max(p, 2)
+    out = dec.plan_step(full)
+    assert dec.on_demand_solves == 2          # stale-S entry not served
+    _assert_step_plans_identical(
+        out, _central(p, speeds, 2).plan_step(full))
+
+
+def test_waste_averse_mode_delegates_to_central_branch():
+    """waste_epsilon > 0 is history-dependent (may reuse the previous
+    plan), so it cannot be a pure function of (mask, snapshot): the
+    planner must bypass the table and stay bitwise with the central
+    master's waste-averse decisions."""
+    p = cyclic_placement(4, 4, 3)
+    speeds = np.array([1.0, 1.4, 1.9, 2.6])
+    central = _central(p, speeds, 1, waste_epsilon=0.5)
+    dec = _decentral(p, speeds, 1, waste_epsilon=0.5)
+    full = (0, 1, 2, 3)
+    loads = {n: 96.0 for n in full}
+    durs = {0: 0.101, 1: 0.069, 2: 0.051, 3: 0.039}  # mild drift: reuse
+    _assert_step_plans_identical(dec.plan_step(full), central.plan_step(full))
+    central.report(loads, durs)
+    dec.report(loads, durs)
+    a, b = central.plan_step(full), dec.plan_step(full)
+    _assert_step_plans_identical(b, a)
+    assert len(dec.table) == 0                # the table never engages
+    assert dec.table_hits == 0
+
+
+# ---------------------------------------------------------------------- #
+# 4. The tombstone
+# ---------------------------------------------------------------------- #
+def test_dead_scheduler_raises_loudly_but_reprs_quietly():
+    d = DeadScheduler("unit test kill")
+    assert "unit test kill" in repr(d)        # repr must not raise
+    assert d.reason == "unit test kill"
+    with pytest.raises(SchedulerKilledError) as ei:
+        d.plan_step([0, 1])
+    msg = str(ei.value)
+    assert "unit test kill" in msg
+    assert "decentral" in msg                 # the fix is named in the error
+    with pytest.raises(SchedulerKilledError):
+        d.stragglers
+    assert isinstance(ei.value, RuntimeError)
+
+
+# ---------------------------------------------------------------------- #
+# 5. Fault drills on the live device engine
+# ---------------------------------------------------------------------- #
+_COMMON = """
+import numpy as np
+from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+from repro.core.elastic import scripted_trace
+from repro.core.decentral import DecentralPlanner, SchedulerKilledError
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+BASE = [1000., 1400., 1900., 2600.]
+DIM = 4 * 96
+X = make_exact_matrix(DIM, 0)
+POLICY = Policy(placement="cyclic", replication=3, stragglers=1)
+SCRIPT = {0: ((2,), ()), 1: ((), (2,)), 3: ((0,), ()), 5: ((), (0,)),
+          6: ((3,), ()), 8: ((), (3,))}
+CHURN_STEPS = sorted(SCRIPT)
+STEPS = 9
+
+def run(replan, kill=None, **cfg_kw):
+    # Noiseless clock + matching initial speeds: deterministic plan-cache
+    # behavior, so every run shares one membership/straggler trajectory and
+    # output differences can only come from the planning authority.
+    kw = dict(block_rows=16, verify="exact", initial_speeds=tuple(BASE),
+              replan=replan)
+    kw.update(cfg_kw)
+    eng = ElasticEngine(
+        MatVecPowerIteration(seed=0), POLICY, EngineConfig(**kw),
+        backend="device", n_machines=4,
+        clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0))
+    pick = np.random.default_rng(1)
+    bad = lambda i, avail: (int(pick.choice(avail)),)
+    res = eng.run(X, n_steps=STEPS, events=scripted_trace(4, SCRIPT),
+                  straggler_sets=bad, kill_scheduler_at=kill)
+    return eng, res
+
+def assert_bitwise(res, base):
+    assert np.array_equal(res.result.eigvec, base.result.eigvec)
+    assert res.result.residuals == base.result.residuals
+    assert res.result.eigval == base.result.eigval
+    assert [r.available for r in res.reports] == \\
+        [r.available for r in base.reports]
+    assert [r.straggled for r in res.reports] == \\
+        [r.straggled for r in base.reports]
+    assert res.executor_cache_size == 1, res.executor_cache_size
+"""
+
+
+def test_kill_at_every_churn_index_decentral_survives_bitwise():
+    out = run_with_devices(_COMMON + """
+_, base = run("central")
+
+eng_d, res_d = run("decentral")
+assert isinstance(eng_d.runner.planning_master, DecentralPlanner)
+assert not eng_d.runner.scheduler_killed
+assert_bitwise(res_d, base)
+
+for kill in CHURN_STEPS:
+    eng, res = run("decentral", kill=kill)
+    assert eng.runner.scheduler_killed
+    assert_bitwise(res, base)
+    # The replica stayed the planning master; the tombstone replaced only
+    # the central standby.
+    assert isinstance(eng.runner.planning_master, DecentralPlanner)
+print("KILLS_OK", len(CHURN_STEPS))
+""", n_devices=4)
+    assert "KILLS_OK 6" in out
+
+
+def test_kill_under_central_mode_fails_loudly():
+    out = run_with_devices(_COMMON + """
+try:
+    run("central", kill=4)
+    raise SystemExit("central-mode kill should raise")
+except SchedulerKilledError as e:
+    assert "decentral" in str(e)   # the error tells the user the fix
+print("CENTRAL_KILL_RAISES")
+""", n_devices=4)
+    assert "CENTRAL_KILL_RAISES" in out
+
+
+def test_kill_composes_with_first_arrival_and_fused_windows():
+    """arrival='first' x fuse_steps=K x replan='decentral' x mid-run kill:
+    realized straggler sets and outputs stay bitwise-equal to the
+    uninterrupted central run under the same modes."""
+    out = run_with_devices(_COMMON + """
+_, base = run("central", fuse_steps=4, arrival="first")
+for kill in (0, 3, 8):
+    eng, res = run("decentral", kill=kill, fuse_steps=4, arrival="first")
+    assert eng.runner.scheduler_killed
+    assert_bitwise(res, base)
+print("FUSED_FIRST_OK")
+""", n_devices=4)
+    assert "FUSED_FIRST_OK" in out
+
+
+def test_policy_replan_opts_in_and_warm_table_does_zero_solves():
+    """Policy(replan='decentral') alone opts the runner in (no EngineConfig
+    knob), and after the run a warmed table serves cached memberships with
+    zero on-demand solves."""
+    out = run_with_devices(_COMMON + """
+_, base = run("central")   # uninterrupted central reference, central Policy
+
+POLICY = Policy(placement="cyclic", replication=3, stragglers=1,
+                replan="decentral")
+eng, res = run("central")  # EngineConfig says central; Policy opts in
+planner = eng.runner.planning_master
+assert isinstance(planner, DecentralPlanner)
+assert_bitwise(res, base)
+
+# Warm-table drill: stage the current membership + neighbors through the
+# speculative batch path, then churn across them — lookups only.
+m = eng.runner.membership
+planner.plan_batch([m, tuple(x for x in m if x != m[-1])])
+before = planner.on_demand_solves
+planner.plan_step(m)
+planner.plan_step(tuple(x for x in m if x != m[-1]))
+assert planner.on_demand_solves == before, "cached membership forced a solve"
+assert planner.table_hits >= 2
+print("POLICY_OPTIN_OK")
+""", n_devices=4)
+    assert "POLICY_OPTIN_OK" in out
