@@ -24,6 +24,7 @@ def main(argv=None) -> None:
 
     if args.smoke:
         _run_devices_subprocess("bench_engine.py", smoke=True, strict=True)
+        _run_devices_subprocess("bench_serve.py", smoke=True, strict=True)
         print("# bench-smoke PASSED")
         return
 
@@ -55,6 +56,9 @@ def main(argv=None) -> None:
     print("# --- ElasticEngine: steps/sec per workload x backend ---")
     _run_devices_subprocess("bench_engine.py",
                             steps=16 if args.full else 8)
+    print("# --- elastic serving: coalesced query traffic under churn ---")
+    _run_devices_subprocess("bench_serve.py",
+                            steps=48 if args.full else 24)
     print("# --- roofline (from the multi-pod dry-run artifacts) ---")
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s")

@@ -133,13 +133,16 @@ class EngineConfig:
                 object.__setattr__(
                     self, name,
                     tuple(float(s) for s in np.asarray(v).ravel()))
-        if self.arrival not in ("barrier", "first"):
-            raise ValueError(
-                f"arrival must be 'barrier' or 'first', got {self.arrival!r}")
-        if self.replan not in ("central", "decentral"):
-            raise ValueError(
-                f"replan must be 'central' or 'decentral', got "
-                f"{self.replan!r}")
+        # String knobs fail at construction, naming the allowed set (the
+        # same rule RunnerConfig enforces — a bad value must not survive
+        # until the first device step, or worse, silently disable a check).
+        from repro.runtime.elastic_runner import _validate_choice
+
+        _validate_choice("arrival", self.arrival, ("barrier", "first"))
+        _validate_choice("replan", self.replan, ("central", "decentral"))
+        _validate_choice("verify", self.verify, (None, "exact", "allclose"))
+        _validate_choice("segmented", self.segmented,
+                         (None, "auto", "pallas", "interpret", "ref"))
 
     @property
     def completion_model(self) -> str:
@@ -251,6 +254,72 @@ class ElasticEngine:
     def runner(self):
         """The device backend's live runner (None before the first run)."""
         return self._runner
+
+    # ------------------------------------------------------------------ #
+    # Reentrant stepping: the serving layer's entry points. prepare()
+    # stages the data and compiles the executor ONCE; each submit() then
+    # drives exactly one device dispatch with a caller-provided operand —
+    # the engine no longer owns the trace, the caller (a server loop) does.
+    # ------------------------------------------------------------------ #
+    def prepare(self, data: Any = None):
+        """Stage ``data`` and build the live runner without running a step.
+
+        Device backend only. Idempotent: a second call with ``data=None``
+        is a no-op; a second call with data raises (one engine, one
+        dataset — same rule as :meth:`run`). Returns the runner.
+        """
+        if self.backend != "device":
+            raise ValueError(
+                "prepare()/submit() drive live device dispatches; build the "
+                "engine with backend='device'")
+        if self._runner is None:
+            self._runner = self._build_runner(data)
+        elif data is not None:
+            raise ValueError(
+                "this engine already staged data; pass data=None to keep "
+                "stepping on it, or build a new ElasticEngine for a "
+                "different matrix")
+        return self._runner
+
+    def submit(
+        self,
+        operand: Any,
+        event: Optional[ElasticEvent] = None,
+        stragglers: Optional[Tuple[int, ...]] = None,
+    ):
+        """Execute ONE elastic step on ``operand``; returns
+        ``(result, reports)``.
+
+        The reentrant serving entry: ``event`` (if any) applies before
+        planning, ``stragglers`` injects a realized set exactly like
+        :meth:`run`'s per-step hook (None = derive under
+        ``arrival="first"``, mask nothing under ``"barrier"``), and
+        ``result`` is the workload's combined step output (e.g. the full
+        ``X @ W`` for :class:`~repro.api.workload.MatMat` — the serving
+        layer slices request columns back out of it). When the engine was
+        built with ``fuse_steps > 1`` and the workload fuses, the dispatch
+        rides the fused window driver as a single-active-step window —
+        same compiled program as a served batch of any other size, so the
+        jit cache stays at one entry either way. State (EWMA, plan cache,
+        membership) carries across submits exactly as across :meth:`run`
+        steps.
+        """
+        if self._runner is None:
+            raise RuntimeError(
+                "submit() needs a staged runner: call prepare(data) first")
+        runner = self._runner
+        wl = self.workload
+        w = wl.init_operand(runner.rows_total, operand)
+        bad = None if stragglers is None else tuple(stragglers)
+        if runner.cfg.fuse_steps > 1 and runner.fuse_supported:
+            runner.ingest_pending()
+            _, ys, _, reports = runner.step_window(
+                w, [bad], events=[event])
+            y = ys[0]
+        else:
+            y, rep = runner.step(w, event=event, stragglers=bad)
+            reports = [rep]
+        return wl.combine(y), reports
 
     # ------------------------------------------------------------------ #
     def run(

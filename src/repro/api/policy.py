@@ -81,6 +81,12 @@ class Policy:
     replan: str = "central"
 
     def __post_init__(self):
+        allowed = ("repetition", "cyclic", "man", "custom")
+        if self.placement not in allowed:
+            # Fail at construction, not steps later inside make_placement.
+            raise ValueError(
+                f"placement must be one of {allowed}, got "
+                f"{self.placement!r}")
         if isinstance(self.stragglers, str):
             if self.stragglers != "auto":
                 raise ValueError(

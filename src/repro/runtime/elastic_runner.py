@@ -166,6 +166,24 @@ class RunnerConfig:
     arrival: str = "barrier"
     replan: str = "central"
 
+    def __post_init__(self):
+        # String knobs fail HERE, at construction, naming the allowed set —
+        # not steps later inside the runner (or never, for knobs like
+        # ``verify`` whose misspelling used to silently disable the check).
+        _validate_choice("arrival", self.arrival, ("barrier", "first"))
+        _validate_choice("replan", self.replan, ("central", "decentral"))
+        _validate_choice("verify", self.verify,
+                         (None, "exact", "allclose"))
+        _validate_choice("segmented", self.segmented,
+                         (None, "auto", "pallas", "interpret", "ref"))
+
+
+def _validate_choice(name: str, value, allowed) -> None:
+    """Raise ValueError naming the bad value and the allowed set."""
+    if value not in allowed:
+        raise ValueError(
+            f"{name} must be one of {allowed}, got {value!r}")
+
 
 @dataclass
 class StepReport:
@@ -305,14 +323,6 @@ class ElasticRunner:
             make_worker_executor,
             stage_matrix,
         )
-
-        if cfg.arrival not in ("barrier", "first"):
-            raise ValueError(
-                f"arrival must be 'barrier' or 'first', got {cfg.arrival!r}")
-        if cfg.replan not in ("central", "decentral"):
-            raise ValueError(
-                f"replan must be 'central' or 'decentral', got "
-                f"{cfg.replan!r}")
 
         if workload is None:
             from repro.api.workload import MatVec
@@ -480,6 +490,26 @@ class ElasticRunner:
         # windows (realized sets must be known before dispatch). Clocks that
         # matter for reproducibility (SyntheticSpeedClock) ignore the wall.
         self._last_step_wall = 1.0
+        # Per-window completion observers: each callback receives the list
+        # of StepReports a dispatch produced, after the results are fetched
+        # and verified but before control returns to the caller. The
+        # serving layer's metrics ride this; callbacks must not raise and
+        # must not mutate the reports.
+        self._completion_callbacks: List = []
+
+    def add_completion_callback(self, cb) -> None:
+        """Register ``cb(reports: List[StepReport])`` to fire once per
+        dispatch — with ``[report]`` on the stepwise/first-arrival paths,
+        with the window's per-active-step report list on the fused path.
+        Observers see every executed step exactly once, in step order."""
+        self._completion_callbacks.append(cb)
+
+    def remove_completion_callback(self, cb) -> None:
+        self._completion_callbacks.remove(cb)
+
+    def _notify_completion(self, reports) -> None:
+        for cb in self._completion_callbacks:
+            cb(reports)
 
     # ------------------------------------------------------------------ #
     @property
@@ -877,6 +907,7 @@ class ElasticRunner:
             t2 = time.perf_counter()
             self._precompile_neighbors(self._membership)
             self.precompile_s += time.perf_counter() - t2
+        self._notify_completion([report])
         return y, report
 
     def step(
@@ -970,6 +1001,7 @@ class ElasticRunner:
             t2 = time.perf_counter()
             self._precompile_neighbors(self._membership)
             self.precompile_s += time.perf_counter() - t2
+        self._notify_completion([report])
         return y, report
 
     def ingest_pending(self) -> None:
@@ -1248,6 +1280,7 @@ class ElasticRunner:
                 measured=durs,
                 speeds_hat=entry.s_plan,
             ))
+        self._notify_completion(reports)
         return w_carry, ys, ws, reports
 
     def _verify(self, y: np.ndarray, w: np.ndarray) -> None:

@@ -1,0 +1,60 @@
+"""Elastic serving layer: multi-tenant query traffic on one elastic fleet.
+
+Everything below :mod:`repro.api` runs ONE job; this package runs MANY.
+An :class:`ElasticServer` holds a shared staged operand (the matrix X,
+replicated over the fleet by the placement exactly as for a single job)
+and serves a stream of independent queries against it:
+
+- ``matvec``  — one vector w, answer ``X @ w``;
+- ``matmat``  — a (r, c) block W, answer ``X @ W``;
+- ``mapreduce`` — the operand of a server-configured
+  :class:`~repro.api.workload.MapReduceRows` workload.
+
+The batching axis is operand COLUMNS: the :class:`~repro.serve.batcher.
+Coalescer` packs queued matvec/matmat queries into one fixed-width
+multi-column operand, so a batch of K queries dispatches as ONE device
+window through the engine's reentrant :meth:`~repro.api.engine.
+ElasticEngine.submit` — same compiled program at every batch size (the
+jit-cache-of-1 invariant extends to the whole serving path), and on the
+exact integer-grid data of the parity tests each answer column is
+bitwise-identical to a sequential single-query run. Map-reduce queries
+run on their own lane and never merge with linear ones.
+
+Admission control is explicit: a bounded queue rejects with a
+``retry_after`` estimate instead of growing without bound, per-request
+deadlines expire queued work and mark late completions, and preemption
+is a *tail-latency* event — with every worker gone, queued requests
+stall and complete after re-arrival instead of failing.
+
+See :mod:`repro.serve.server` for the front door (sync core +
+:class:`AsyncElasticServer` asyncio wrapper), :mod:`repro.serve.batcher`
+for the coalescing rule, and :mod:`repro.serve.metrics` for the
+structured latency/goodput/queue telemetry the bench and CI consume.
+"""
+
+from .batcher import Batch, Coalescer
+from .metrics import ServerMetrics
+from .request import KINDS, LINEAR_KINDS, Request, Response, Ticket
+from .server import (
+    AsyncElasticServer,
+    ElasticServer,
+    RealClock,
+    ServeConfig,
+    SyntheticClock,
+)
+
+__all__ = [
+    "AsyncElasticServer",
+    "Batch",
+    "Coalescer",
+    "ElasticServer",
+    "KINDS",
+    "LINEAR_KINDS",
+    "RealClock",
+    "Request",
+    "Response",
+    "ServeConfig",
+    "ServerMetrics",
+    "SyntheticClock",
+    "Ticket",
+]

@@ -1,18 +1,19 @@
-"""Dormant-module wake-up: checkpoint round-trips and the serve driver.
+"""Dormant-module wake-up: checkpoint round-trips and the decode demo.
 
 ``runtime/checkpoint.py`` is the fault-tolerance substrate the decentralized
 re-planning story leans on (a job that survives a scheduler kill should
-also survive a whole-process restart), and ``launch/serve.py`` is the
-batched prefill+decode driver — both shipped without coverage. These tests
-pin the contracts:
+also survive a whole-process restart), and ``examples/decode_demo.py`` is
+the batched prefill+decode driver (relocated from ``launch/serve.py``,
+which stays as a deprecation shim). These tests pin the contracts:
 
 - save/restore round-trips a pytree bitwise (including the bf16 widen/cast
   path and the JSON ``extra`` sidecar), the LATEST pointer tracks the
   newest step atomically, and shape mismatches fail loudly;
 - a power-iteration run checkpointed mid-run and resumed in a FRESH engine
   finishes bitwise-equal to the uninterrupted run (the restart drill);
-- ``serve.main`` generates the expected (batch, gen_len) token grid on
-  forced host devices.
+- ``decode_demo.main`` generates the expected (batch, gen_len) token grid
+  on forced host devices, and the legacy ``repro.launch.serve`` import
+  path still works — but warns.
 """
 
 import os
@@ -127,13 +128,32 @@ print("RESUME_OK")
 
 
 @pytest.mark.slow
-def test_serve_smoke_generates_token_grid():
+def test_decode_demo_generates_token_grid():
     out = run_with_devices("""
-from repro.launch.serve import main
-gen = main(["--arch", "mamba2-370m", "--reduced", "--batch", "2",
-            "--prompt-len", "8", "--gen-len", "3"])
+import importlib.util, os
+path = os.path.join(%r, "examples", "decode_demo.py")
+spec = importlib.util.spec_from_file_location("decode_demo", path)
+demo = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(demo)
+gen = demo.main(["--arch", "mamba2-370m", "--reduced", "--batch", "2",
+                 "--prompt-len", "8", "--gen-len", "3"])
 assert gen.shape == (2, 3), gen.shape
 assert (gen >= 0).all()
-print("SERVE_OK", gen.shape)
-""", n_devices=4)
-    assert "SERVE_OK" in out
+print("DECODE_OK", gen.shape)
+""" % os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           n_devices=4)
+    assert "DECODE_OK" in out
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_launch_serve_shim_warns_and_delegates():
+    """The legacy path still imports and still runs the demo — through a
+    DeprecationWarning. (argparse exits with code 2 on the missing
+    required --arch BEFORE any jax work, so this stays a fast test: it
+    proves the shim warns and hands argv to the relocated main.)"""
+    from repro.launch import serve
+
+    with pytest.warns(DeprecationWarning, match="decode_demo"):
+        with pytest.raises(SystemExit) as exc:
+            serve.main([])
+    assert exc.value.code == 2
