@@ -25,6 +25,7 @@ def main(argv=None) -> None:
     if args.smoke:
         _run_devices_subprocess("bench_engine.py", smoke=True, strict=True)
         _run_devices_subprocess("bench_serve.py", smoke=True, strict=True)
+        _run_devices_subprocess("bench_faults.py", smoke=True, strict=True)
         print("# bench-smoke PASSED")
         return
 
@@ -59,6 +60,9 @@ def main(argv=None) -> None:
     print("# --- elastic serving: coalesced query traffic under churn ---")
     _run_devices_subprocess("bench_serve.py",
                             steps=48 if args.full else 24)
+    print("# --- fault recovery: detect->replan->re-execute, goodput vs fault rate ---")
+    _run_devices_subprocess("bench_faults.py",
+                            steps=8 if args.full else 4)
     print("# --- roofline (from the multi-pod dry-run artifacts) ---")
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s")

@@ -22,6 +22,7 @@ shims over this engine; see their modules.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
@@ -66,6 +67,18 @@ class EngineConfig:
       segmented: block-list execution mode (None = per-block loop;
         "auto"/"pallas"/"interpret"/"ref" = the segment-aware whole-list
         path, see :class:`~repro.runtime.elastic_runner.RunnerConfig`).
+      dispatch_timeout: modeled per-dispatch deadline (seconds). A worker
+        whose clocked duration exceeds it is treated as silent: masked as
+        a realized straggler when the S budget covers it, demoted +
+        re-executed otherwise. None disables the detector.
+      max_fault_retries: recovery budget per step index — how many times
+        :meth:`ElasticEngine.run` demotes + replans + re-executes one step
+        after :class:`~repro.faults.chaos.FaultAbort` before giving up and
+        re-raising.
+      checkpoint_dir / checkpoint_every / checkpoint_on_fault: periodic
+        (every k engine steps, window-boundary-aligned when fused) and
+        on-fault snapshots of the full resumable state via
+        :meth:`ElasticEngine.save_state`; ``resume()`` continues bitwise.
 
     Both backends:
       arrival: the master's consume rule — ``"barrier"`` (legacy, block on
@@ -116,6 +129,12 @@ class EngineConfig:
     plan_cache_size: Optional[int] = None
     fuse_steps: int = 1
     segmented: Optional[str] = None
+    # device: unannounced-failure tolerance + checkpointing
+    dispatch_timeout: Optional[float] = None
+    max_fault_retries: int = 3
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: Optional[int] = None
+    checkpoint_on_fault: bool = False
     # simulate
     n_draws: int = 1000
     speed_mean: float = 1.0
@@ -143,6 +162,22 @@ class EngineConfig:
         _validate_choice("verify", self.verify, (None, "exact", "allclose"))
         _validate_choice("segmented", self.segmented,
                          (None, "auto", "pallas", "interpret", "ref"))
+        if self.dispatch_timeout is not None and self.dispatch_timeout <= 0:
+            raise ValueError(
+                f"dispatch_timeout must be > 0 (modeled seconds), got "
+                f"{self.dispatch_timeout}")
+        if self.max_fault_retries < 0:
+            raise ValueError(
+                f"max_fault_retries must be >= 0, got {self.max_fault_retries}")
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1 steps, got "
+                f"{self.checkpoint_every}")
+        if self.checkpoint_dir is None and (
+                self.checkpoint_every is not None or self.checkpoint_on_fault):
+            raise ValueError(
+                "checkpoint_every / checkpoint_on_fault need a "
+                "checkpoint_dir to write to")
 
     @property
     def completion_model(self) -> str:
@@ -176,6 +211,12 @@ class EngineResult:
     cache_hits: int = 0
     executor_cache_size: int = -1
     stragglers: int = 0
+    # Unannounced-failure telemetry (device runs with faults/timeouts):
+    # every fired fault's FaultRecord, the number of abort→demote→replan→
+    # re-execute cycles, and the checkpoint paths this run wrote.
+    fault_records: List = field(default_factory=list)
+    recoveries: int = 0
+    checkpoints: List = field(default_factory=list)
 
 
 class ElasticEngine:
@@ -224,6 +265,7 @@ class ElasticEngine:
         self.mesh = mesh
         self.worker_axis = worker_axis
         self._runner = None  # built lazily (device) or adopted (from_runner)
+        self._last_operand = None  # last run's final carry (checkpointing)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -322,6 +364,151 @@ class ElasticEngine:
         return wl.combine(y), reports
 
     # ------------------------------------------------------------------ #
+    # Checkpoint / resume: the FULL resumable device-backend state — the
+    # iterate carry, the EWMA speed estimates, membership, the pending
+    # measurement feed, the plan-cache keys (plans themselves are a pure
+    # function of state and recompile bitwise on warm-start), and the
+    # synthetic clock's RNG — so a killed run continues bit for bit.
+    # ------------------------------------------------------------------ #
+    def save_state(self, directory: str, operand=None,
+                   note: str = "") -> str:
+        """Snapshot the live runner into ``directory`` (atomic; see
+        :mod:`repro.runtime.checkpoint`). ``operand`` is the iterate carry
+        to store (defaults to the last completed run's final carry).
+        Returns the checkpoint path."""
+        from repro.runtime.checkpoint import save_checkpoint
+
+        runner = self._runner
+        if runner is None:
+            raise RuntimeError(
+                "no live runner to checkpoint: run() or prepare() first")
+        master = runner.planning_master
+        if operand is None:
+            operand = self._last_operand
+        has_operand = operand is not None
+        tree = {
+            "operand": (np.asarray(operand) if has_operand
+                        else np.zeros(0, dtype=np.float64)),
+            "speeds": master.estimator.speeds,
+        }
+        clock_state = None
+        if hasattr(runner.clock, "state_dict"):
+            clock_state = runner.clock.state_dict()
+        extra = {"engine": {
+            "runner_step": int(runner._step),
+            "membership": [int(n) for n in runner.membership],
+            "measured_ever": sorted(
+                int(n) for n in runner._measured_ever),
+            "speed_seeded": bool(runner._speed_seeded),
+            "stragglers": int(master.stragglers),
+            "pending_loads": {
+                str(k): float(v)
+                for k, v in runner._pending_loads.items()},
+            "pending_durations": {
+                str(k): float(v)
+                for k, v in runner._pending_durations.items()},
+            "plan_cache_keys": [
+                list(map(int, k)) for k in runner._plan_cache],
+            "clock": clock_state,
+            "last_step_wall": float(runner._last_step_wall),
+            "has_operand": has_operand,
+            "workload": self.workload.name,
+            "note": note,
+        }}
+        return save_checkpoint(directory, int(runner._step), tree, extra)
+
+    def resume(self, directory: str, data: Any = None,
+               path: Optional[str] = None) -> Tuple[int, Any]:
+        """Restore a :meth:`save_state` snapshot into this engine's runner
+        and return ``(step, operand)`` — feed ``operand`` (and the
+        remaining trace) back into :meth:`run` to continue the computation
+        **bitwise-equal** to the uninterrupted run: the carry, the EWMA
+        estimates, the membership, the pending measurement feed, and the
+        synthetic clock's RNG all continue from the saved bits, and the
+        plan cache warm-starts from its saved keys (plans are a pure
+        function of (membership, speeds, S), so the recompiled arrays are
+        identical). ``path`` pins a specific checkpoint; the default is
+        the directory's LATEST pointer. ``data`` stages the matrix when
+        the engine has not run yet (same rule as :meth:`prepare`)."""
+        from repro.runtime.checkpoint import (
+            latest_checkpoint,
+            restore_checkpoint,
+        )
+
+        if self.backend != "device":
+            raise ValueError(
+                "resume() restores the live runner; build the engine with "
+                "backend='device'")
+        ckpt = path if path is not None else latest_checkpoint(directory)
+        if ckpt is None:
+            raise FileNotFoundError(
+                f"no checkpoint found under {directory!r}")
+        runner = self.prepare(data)
+        like = self._like_from_manifest(ckpt)
+        step, tree, extra = restore_checkpoint(ckpt, like)
+        eng = extra.get("engine", {})
+        master = runner.planning_master
+        master.estimator.load_speeds(np.asarray(tree["speeds"]))
+        avail = tuple(
+            int(n) for n in eng.get("membership", runner.membership))
+        runner.placement.restrict(avail)  # raises if the data is gone
+        runner._membership = avail
+        runner._measured_ever = {
+            int(n) for n in eng.get("measured_ever", ())}
+        runner._speed_seeded = bool(eng.get("speed_seeded", True))
+        runner._pending_loads = {
+            int(k): float(v)
+            for k, v in eng.get("pending_loads", {}).items()}
+        runner._pending_durations = {
+            int(k): float(v)
+            for k, v in eng.get("pending_durations", {}).items()}
+        runner._step = int(eng.get("runner_step", step))
+        runner._last_step_wall = float(eng.get("last_step_wall", 1.0))
+        if eng.get("stragglers") is not None:
+            runner.set_stragglers(int(eng["stragglers"]))
+        clock_state = eng.get("clock")
+        if clock_state is not None and hasattr(runner.clock, "load_state"):
+            runner.clock.load_state(clock_state)
+        # Warm-start the plan cache from its saved keys: entries rebuild
+        # under the restored estimator state (the LP is pure, the arrays
+        # come back identical). Memberships that became infeasible since
+        # the snapshot are skipped.
+        runner._current = None
+        for key in eng.get("plan_cache_keys", ()):
+            k = tuple(int(n) for n in key)
+            try:
+                runner._plan_for(k)
+            except Exception:
+                continue
+        operand = (
+            np.asarray(tree["operand"])
+            if eng.get("has_operand", True) else None)
+        self._last_operand = operand
+        return int(eng.get("runner_step", step)), operand
+
+    @staticmethod
+    def _like_from_manifest(path: str) -> Dict[str, np.ndarray]:
+        """Zero prototypes matching a :meth:`save_state` checkpoint's
+        leaves: the manifest records every leaf's shape/dtype, so restore
+        rebuilds the tree without the caller knowing the saved shapes."""
+        import json
+        import os
+
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        like: Dict[str, np.ndarray] = {}
+        for entry in manifest["leaves"]:
+            name = entry["key"].strip("[]'\"")  # keystr: "['operand']"
+            try:
+                dtype = np.dtype(entry["dtype"])
+            except TypeError:
+                import ml_dtypes
+
+                dtype = np.dtype(getattr(ml_dtypes, entry["dtype"]))
+            like[name] = np.zeros(tuple(entry["shape"]), dtype=dtype)
+        return like
+
+    # ------------------------------------------------------------------ #
     def run(
         self,
         data: Any = None,
@@ -330,6 +517,7 @@ class ElasticEngine:
         straggler_sets=None,
         operand: Optional[np.ndarray] = None,
         kill_scheduler_at: Optional[int] = None,
+        faults=None,
     ) -> EngineResult:
         """Drive one elastic run through ``events``.
 
@@ -360,17 +548,32 @@ class ElasticEngine:
             replicated local rule with outputs bitwise-equal to the
             uninterrupted run; under ``replan="central"`` the next plan
             raises :class:`~repro.core.decentral.SchedulerKilledError`.
+            Sugar over ``faults``: it is folded into the run's injector as
+            a ``scheduler_kill`` :class:`~repro.faults.chaos.FaultSpec`.
+          faults: unannounced-failure schedule (device backend only) — a
+            :class:`~repro.faults.chaos.ChaosPlan`, an iterable of
+            :class:`~repro.faults.chaos.FaultSpec`, or a pre-built
+            :class:`~repro.faults.chaos.FaultInjector`. Fault step
+            indices count steps of THIS run. Covered losses are masked as
+            realized stragglers; uncovered losses abort the dispatch, the
+            dead workers are demoted like a preemption, and the step
+            re-executes (at most ``cfg.max_fault_retries`` times per step
+            index) — outputs stay bitwise-equal to the clean run.
         """
         if self.backend == "device":
             if n_steps is None:
                 raise ValueError("the device backend needs an explicit n_steps")
             return self._run_device(data, int(n_steps), events,
                                     straggler_sets, operand,
-                                    kill_scheduler_at)
+                                    kill_scheduler_at, faults)
         if kill_scheduler_at is not None:
             raise ValueError(
                 "kill_scheduler_at is a device-backend fault injection; "
                 "the simulate backend has no live scheduler to kill")
+        if faults is not None:
+            raise ValueError(
+                "faults= is a device-backend injection; the simulate "
+                "backend has no live dispatches to fail")
         return self._run_simulate(n_steps, events)
 
     # ------------------------------------------------------------------ #
@@ -396,6 +599,7 @@ class ElasticEngine:
             segmented=self.cfg.segmented,
             arrival=self.cfg.arrival,
             replan=self.cfg.replan,
+            dispatch_timeout=self.cfg.dispatch_timeout,
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -415,7 +619,10 @@ class ElasticEngine:
         return runner
 
     def _run_device(self, data, n_steps, events, straggler_sets,
-                    operand, kill_scheduler_at=None) -> EngineResult:
+                    operand, kill_scheduler_at=None,
+                    faults=None) -> EngineResult:
+        from repro.faults.chaos import FaultAbort, FaultInjector, FaultSpec
+
         if self._runner is None:
             self._runner = self._build_runner(data)
         elif data is not None:
@@ -444,17 +651,133 @@ class ElasticEngine:
             raise ValueError(
                 f"kill_scheduler_at={kill_at} outside this run's step range "
                 f"[0, {n_steps})")
+        # Engine step i of this run is the runner's absolute step base0+i:
+        # the injector, the window-break peeks, and the checkpoint step
+        # stamps all speak absolute indices.
+        base0 = runner._step
+        inj = FaultInjector.coerce(faults, base_step=base0)
+        if kill_at is not None:
+            # Legacy sugar: the ad-hoc scheduler kill is just one fault kind
+            # of the chaos schedule now — same injection point (before step
+            # kill_at plans), same observable behavior.
+            if inj is None:
+                inj = FaultInjector(base_step=base0)
+            inj.add(FaultSpec("scheduler_kill", kill_at))
+        if inj is None and self.cfg.dispatch_timeout is not None \
+                and runner.fault_injector is None:
+            # Timeouts are detected runner-side but *recorded* through the
+            # injector — install an empty one so a fault-free timed run
+            # still reports its masked/demoted workers in fault_records.
+            inj = FaultInjector(base_step=base0)
+        if inj is not None:
+            runner.fault_injector = inj
+        inj = runner.fault_injector  # a server may have installed one
+        log_base = 0 if inj is None else len(inj.log)
 
-        def step_bad(i: int, membership) -> Optional[Tuple[int, ...]]:
+        # Events are consumed from the iterator EXACTLY once per step index
+        # and replayed from this cache when a faulted step re-executes —
+        # an aborted window must not eat trace events.
+        ev_cache: Dict[int, Optional[ElasticEvent]] = {}
+
+        def ev_for(j: int) -> Optional[ElasticEvent]:
+            if j not in ev_cache:
+                ev_cache[j] = (
+                    next(ev_iter, None) if ev_iter is not None else None)
+            return ev_cache[j]
+
+        # Workers demoted by fault recovery: the trace doesn't know they
+        # died, so its later events are filtered against this set (and an
+        # explicit `arrived` revives — the machine came back). Preempted/
+        # arrived are recomputed against the live membership so retried
+        # events stay idempotent.
+        dead: set = set()
+
+        def filt(ev: Optional[ElasticEvent]) -> Optional[ElasticEvent]:
+            if ev is None or not dead:
+                return ev
+            dead.difference_update(ev.arrived)
+            avail = tuple(sorted(set(ev.available) - dead))
+            cur = set(runner.membership)
+            return ElasticEvent(
+                step=ev.step,
+                preempted=tuple(sorted(cur - set(avail))),
+                arrived=tuple(sorted(set(avail) - cur)),
+                available=avail,
+            )
+
+        def drain_demotions(i: int) -> None:
+            # A covered crash was masked as a realized straggler; its
+            # demotion (the synthesized preemption) lands before the next
+            # step, exactly like an announced event one step late.
+            if not runner.pending_demotions:
+                return
+            gone = set(runner.pending_demotions)
+            runner.pending_demotions.clear()
+            dead.update(gone)
+            cur = set(runner.membership)
+            avail = tuple(sorted(cur - gone))
+            runner.apply_event(ElasticEvent(
+                step=base0 + i, preempted=tuple(sorted(gone & cur)),
+                arrived=(), available=avail))
+
+        def step_bad_of(sets_arg, i: int, membership
+                        ) -> Optional[Tuple[int, ...]]:
             # None = "no injection": the runner masks nothing (barrier) or
             # derives the realized set from arrival order (first).
-            if straggler_sets is None:
+            if sets_arg is None:
                 return None
-            if callable(straggler_sets):
-                got = straggler_sets(i, membership)
+            if callable(sets_arg):
+                got = sets_arg(i, membership)
                 return None if got is None else tuple(got)
-            got = straggler_sets[i]
+            got = sets_arg[i]
             return None if got is None else tuple(got)
+
+        recoveries = 0
+        checkpoints: List[str] = []
+        ckpt_every = self.cfg.checkpoint_every
+        retries: Dict[int, int] = {}
+        recover_t0: Dict[int, float] = {}
+
+        def checkpoint(w_host, i: int, tag: str) -> None:
+            if self.cfg.checkpoint_dir is None:
+                return
+            checkpoints.append(self.save_state(
+                self.cfg.checkpoint_dir, operand=np.asarray(w_host),
+                note=tag))
+
+        def recover(fa: FaultAbort, i: int, w_host) -> None:
+            # The abort fired BEFORE anything dispatched: the carry is
+            # valid, nothing partial was consumed. Demote the dead workers
+            # as if a preemption event had arrived, optionally snapshot,
+            # and let the loop re-plan + re-execute the same step index.
+            nonlocal recoveries
+            n = retries.get(i, 0) + 1
+            retries[i] = n
+            if n > self.cfg.max_fault_retries:
+                raise fa
+            recoveries += 1
+            recover_t0.setdefault(i, time.perf_counter())
+            if fa.demote:
+                dead.update(fa.demote)
+                cur = set(runner.membership)
+                avail = tuple(sorted(cur - set(fa.demote)))
+                runner.apply_event(ElasticEvent(
+                    step=fa.step,
+                    preempted=tuple(sorted(set(fa.demote) & cur)),
+                    arrived=(), available=avail))
+            if self.cfg.checkpoint_on_fault:
+                checkpoint(w_host, i, f"on-fault: {fa.kind} @ step {fa.step}")
+
+        def settle_recovery(i: int) -> None:
+            # The re-executed step completed: stamp the measured host-side
+            # abort→replan→re-execute latency onto the demotion records.
+            t0 = recover_t0.pop(i, None)
+            if t0 is None or inj is None:
+                return
+            dt = time.perf_counter() - t0
+            for rec in inj.log:
+                if rec.action == "demoted" and rec.recover_s == 0.0:
+                    rec.recover_s = dt
 
         if fused:
             # Window loop: up to K steps per dispatch. Events are consumed
@@ -468,52 +791,52 @@ class ElasticEngine:
             # (where the runner's speculative neighbor precompile — the
             # part that IS overlapped with device time — then covers the
             # following churn). Either way every event applies at the same
-            # step index as the stepwise path.
+            # step index as the stepwise path. A step with a scheduled
+            # fault always lands at a window HEAD (assembly breaks before
+            # it): an uncovered loss then aborts before the window draws
+            # any clock samples, so the retry replays an identical window.
             K = runner.cfg.fuse_steps
-            pending_ev = None
             w_carry = w
             i = 0
             while i < n_steps:
-                if (kill_at is not None and i >= kill_at
-                        and not runner.scheduler_killed):
-                    runner.kill_scheduler(
-                        f"fault injection before step {kill_at}")
                 # Fold the previous window's measurements into the EWMA
                 # BEFORE assembling this one, so plan_is_ready (the flush
                 # rule below) and the in-window _plan_for judge drift
                 # against the same estimator state.
                 runner.ingest_pending()
-                ev = pending_ev if pending_ev is not None else (
-                    next(ev_iter, None) if ev_iter is not None else None)
-                pending_ev = None
+                drain_demotions(i)
+                ev = filt(ev_for(i))
                 membership = (
                     tuple(sorted(ev.available)) if ev is not None
                     else runner.membership
                 )
                 evs: List = [ev]
-                sets = [step_bad(i, membership)]
+                sets = [step_bad_of(straggler_sets, i, membership)]
                 j = i + 1
                 while j < n_steps and len(sets) < K:
-                    if j == kill_at:
-                        # End the window here so the kill lands at the next
-                        # window's head — exactly before step kill_at plans,
-                        # matching the stepwise driver's injection point.
+                    if inj is not None and inj.has_fault(base0 + j):
+                        # Break so the fault fires at the next window's
+                        # head — an abort there discards nothing.
                         break
-                    ev_j = next(ev_iter, None) if ev_iter is not None else None
+                    ev_j = filt(ev_for(j))
                     if ev_j is not None:
                         new_mem = tuple(sorted(ev_j.available))
                         if (
                             (ev_j.is_churn or new_mem != membership)
                             and not runner.plan_is_ready(new_mem)
                         ):
-                            pending_ev = ev_j  # flush: compile off-window
-                            break
+                            break  # flush: compile off-window
                         membership = new_mem
                     evs.append(ev_j)
-                    sets.append(step_bad(j, membership))
+                    sets.append(step_bad_of(straggler_sets, j, membership))
                     j += 1
-                w_carry, ys, ws, reps = runner.step_window(
-                    w_carry, sets, events=evs)
+                try:
+                    w_carry, ys, ws, reps = runner.step_window(
+                        w_carry, sets, events=evs)
+                except FaultAbort as fa:
+                    recover(fa, i, np.asarray(w_carry))
+                    continue
+                settle_recovery(i)
                 reports.extend(reps)
                 # Replay the host-side fold on the window outputs: combine +
                 # consume produce the per-step results/statistics exactly as
@@ -522,22 +845,36 @@ class ElasticEngine:
                 for k in range(len(sets)):
                     last = wl.combine(ys[k])
                     wl.consume(last, ws[k])
-                i += len(sets)
+                i_prev, i = i, i + len(sets)
+                # Window-boundary-aligned periodic snapshot: fire when the
+                # window crossed a checkpoint_every boundary.
+                if ckpt_every is not None and (
+                        i // ckpt_every > i_prev // ckpt_every):
+                    checkpoint(np.asarray(w_carry), i,
+                               f"periodic @ engine step {i}")
             w = np.asarray(w_carry)
         else:
-            for i in range(n_steps):
-                if i == kill_at:
-                    runner.kill_scheduler(
-                        f"fault injection before step {kill_at}")
-                ev = next(ev_iter, None) if ev_iter is not None else None
+            i = 0
+            while i < n_steps:
+                drain_demotions(i)
+                ev = filt(ev_for(i))
                 if ev is not None:
                     runner.apply_event(ev)
-                bad = step_bad(i, runner.membership)
-                y, rep = runner.step(w, stragglers=bad)
+                bad = step_bad_of(straggler_sets, i, runner.membership)
+                try:
+                    y, rep = runner.step(w, stragglers=bad)
+                except FaultAbort as fa:
+                    recover(fa, i, w)
+                    continue
+                settle_recovery(i)
                 reports.append(rep)
                 last = wl.combine(y)
                 w = wl.consume(last, w)
+                i += 1
+                if ckpt_every is not None and i % ckpt_every == 0:
+                    checkpoint(w, i, f"periodic @ engine step {i}")
 
+        self._last_operand = w
         return EngineResult(
             backend="device",
             workload=wl.name,
@@ -550,6 +887,10 @@ class ElasticEngine:
             cache_hits=runner.cache_hits - base[3],
             executor_cache_size=runner.executor_cache_size,
             stragglers=runner.planning_master.stragglers,
+            fault_records=(
+                [] if inj is None else list(inj.log[log_base:])),
+            recoveries=recoveries,
+            checkpoints=checkpoints,
         )
 
     # ------------------------------------------------------------------ #

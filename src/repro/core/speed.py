@@ -38,6 +38,19 @@ class SpeedEstimator:
             raise ValueError(f"speed must be positive and finite, got {value}")
         self._s[int(n)] = float(value)
 
+    def load_speeds(self, speeds: Sequence[float]) -> None:
+        """Replace the whole estimate vector (checkpoint restore). The
+        values are adopted bit-for-bit — no EWMA mixing — so a resumed run
+        continues from exactly the estimator state that was saved."""
+        s = np.asarray(speeds, dtype=np.float64).copy()
+        if s.shape != self._s.shape:
+            raise ValueError(
+                f"speed vector shape {s.shape} != estimator shape "
+                f"{self._s.shape}")
+        if np.any(s <= 0) or not np.all(np.isfinite(s)):
+            raise ValueError("speeds must be strictly positive and finite")
+        self._s = s
+
     def update(self, measured: Dict[int, float]) -> np.ndarray:
         """Mix in per-machine measurements {machine_id: nu}. Returns s_hat."""
         for n, nu in measured.items():

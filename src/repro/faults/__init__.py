@@ -1,0 +1,42 @@
+"""Unannounced-failure injection and recovery (the chaos subsystem).
+
+The paper's elasticity model assumes *announced* preemptions: every
+membership change arrives as a clean
+:class:`~repro.core.elastic.ElasticEvent` before the step that must
+honor it. Real fleets also fail silently — a worker crashes mid-step, a
+partial result never arrives, a speed report is lost in transit, a plan
+table replica goes stale, the central scheduler dies. This package
+schedules exactly those faults deterministically
+(:class:`~repro.faults.chaos.ChaosPlan`), injects them at the runner /
+engine / server seams through a :class:`~repro.faults.chaos.FaultInjector`
+hook, and defines the abort signal
+(:class:`~repro.faults.chaos.FaultAbort`) the recovery paths catch.
+
+Recovery invariant (asserted by ``tests/test_faults.py``): because every
+output row of a step is computed by exactly one surviving holder from
+identical staged bits, a run that recovers from any injected fault —
+masking a silent worker as a realized straggler when the S budget covers
+it, or demoting it like a preemption and re-executing the step when it
+does not — finishes **bitwise-equal** to the clean run, with the jit
+cache still at one entry (recovery is data, never a recompile).
+"""
+
+from .chaos import (
+    DISPATCH_KINDS,
+    FAULT_KINDS,
+    ChaosPlan,
+    FaultAbort,
+    FaultInjector,
+    FaultRecord,
+    FaultSpec,
+)
+
+__all__ = [
+    "ChaosPlan",
+    "DISPATCH_KINDS",
+    "FAULT_KINDS",
+    "FaultAbort",
+    "FaultInjector",
+    "FaultRecord",
+    "FaultSpec",
+]

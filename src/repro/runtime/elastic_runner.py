@@ -165,6 +165,7 @@ class RunnerConfig:
     segmented: Optional[str] = None
     arrival: str = "barrier"
     replan: str = "central"
+    dispatch_timeout: Optional[float] = None
 
     def __post_init__(self):
         # String knobs fail HERE, at construction, naming the allowed set —
@@ -176,6 +177,10 @@ class RunnerConfig:
                          (None, "exact", "allclose"))
         _validate_choice("segmented", self.segmented,
                          (None, "auto", "pallas", "interpret", "ref"))
+        if self.dispatch_timeout is not None and self.dispatch_timeout <= 0:
+            raise ValueError(
+                f"dispatch_timeout must be > 0 (modeled seconds), got "
+                f"{self.dispatch_timeout}")
 
 
 def _validate_choice(name: str, value, allowed) -> None:
@@ -268,6 +273,24 @@ class SyntheticSpeedClock:
             for n in available
             if row_loads[n] > 0
         }
+
+    def state_dict(self) -> Dict:
+        """JSON-able snapshot of the speed process (PCG64 RNG state +
+        drift vector + draw count). A checkpoint stores this so a resumed
+        run replays the SAME realized speed sequence an uninterrupted run
+        would have drawn — the EWMA trajectory, and with it every plan
+        decision, continues bit for bit."""
+        return {
+            "rng": self.process._rng.bit_generator.state,
+            "drift": [float(v) for v in self.process._drift],
+            "draws": len(self.history),
+        }
+
+    def load_state(self, state: Dict) -> None:
+        """Restore :meth:`state_dict` output (history restarts empty: the
+        draw count is carried in the RNG state itself)."""
+        self.process._rng.bit_generator.state = state["rng"]
+        self.process._drift = np.asarray(state["drift"], dtype=np.float64)
 
 
 # ---------------------------------------------------------------------- #
@@ -496,6 +519,14 @@ class ElasticRunner:
         # serving layer's metrics ride this; callbacks must not raise and
         # must not mutate the reports.
         self._completion_callbacks: List = []
+        # Unannounced-failure seams (repro.faults): the injector is
+        # consulted at each step's head; pending_demotions collects workers
+        # whose covered crash was masked this step — the caller (engine /
+        # server) turns them into a synthesized preemption event before the
+        # next step. Uncovered faults never get this far: the step raises
+        # FaultAbort pre-dispatch with the demotion set on the exception.
+        self.fault_injector = None
+        self.pending_demotions: Set[int] = set()
 
     def add_completion_callback(self, cb) -> None:
         """Register ``cb(reports: List[StepReport])`` to fire once per
@@ -552,6 +583,45 @@ class ElasticRunner:
         self.scheduler = dead
         self.scheduler_killed = True
 
+    def set_stragglers(self, stragglers: int) -> None:
+        """Re-commit the straggler tolerance S mid-run (the serving
+        layer's degraded shed mode rides this). Mirrors what
+        ``select_straggler_tolerance(commit=True)`` does to the masters:
+        ``t_max`` re-derives unless it was pinned explicitly, and every
+        memoized plan compiled under the old S is evicted lazily by the
+        stale-S gate in :meth:`_plan_for` / :meth:`plan_is_ready` (plan
+        stamps carry S, so the decentral table self-invalidates too)."""
+        s = int(stragglers)
+        if s < 0:
+            raise ValueError(f"stragglers must be >= 0, got {s}")
+        targets = [self._master]
+        if not self.scheduler_killed and self.scheduler is not self._master:
+            targets.append(self.scheduler)
+        for m in targets:
+            if m.stragglers == s:
+                continue
+            m.stragglers = s
+            if not m._t_max_explicit:
+                m.t_max = m._derive_t_max()
+
+    def invalidate_plan_state(self) -> int:
+        """Drop every replicated planning artifact (the
+        ``stale_plan_table`` fault): the memoized plan cache, the fused
+        window's device stacks, and — in decentral mode — the replicated
+        :class:`~repro.core.decentral.PlanTable`. Plans are a pure
+        function of (membership, speed snapshot, S), so the next step
+        re-solves and produces the same bits; the cost is one replan, not
+        a recompile of the executor. Returns the number of decentral
+        table entries dropped (0 in central mode)."""
+        self._plan_cache.clear()
+        self._window_dev.clear()
+        n = 0
+        table = getattr(self._master, "table", None)
+        if table is not None:
+            n = len(table)
+            table.clear()
+        return n
+
     @property
     def executor_cache_size(self) -> int:
         """Compiled-program count across the step drivers (expected: 1
@@ -583,7 +653,15 @@ class ElasticRunner:
         """Build a cache entry from a planned step: expand blocks, account
         rows (waste bookkeeping), stage the plan arrays on device, insert
         into the LRU cache. This is the whole per-plan host cost; once an
-        entry exists, adopting it is an O(1) array swap."""
+        entry exists, adopting it is an O(1) array swap.
+
+        Exception safety: every fallible operation — the block expansion,
+        the row accounting, every device upload — completes BEFORE the
+        cache insert below, which is the commit point. A raise anywhere in
+        the build leaves the cache exactly as it was: no key ever maps to
+        a half-built entry whose device arrays don't exist (it would serve
+        a partial plan on its next hit). Tested by the fault-injected
+        regression in ``tests/test_faults.py``."""
         from .executor import block_plan
 
         bp = block_plan(
@@ -610,6 +688,7 @@ class ElasticRunner:
             dev_valid=jnp.asarray(
                 (bp.blk_seg_t >= 0).astype(np.float32)),
         )
+        # ---- commit point: nothing below can raise on a built entry ----
         self._plan_cache[avail] = entry
         self._plan_cache.move_to_end(avail)
         self.plans_compiled += 1
@@ -755,10 +834,21 @@ class ElasticRunner:
             # be solved on demand — and raise there — only if actually
             # visited).
             return 0
+        stored = 0
         for nb, splan in zip(todo, splans):
-            self._store_entry(nb, splan, s_hat)
+            try:
+                self._store_entry(nb, splan, s_hat)
+            except Exception:
+                # Same contract as the batch solve above: a neighbor whose
+                # block expansion or device upload fails is simply not
+                # cached — the live step that triggered the speculation
+                # must not die for it. _store_entry leaves nothing partial
+                # behind (the cache insert is its commit point), so the
+                # remaining neighbors still store cleanly.
+                continue
             self.plans_precompiled += 1
-        return len(todo)
+            stored += 1
+        return stored
 
     def _check_straggler_ids(self, stragglers: Sequence[int]) -> None:
         """Reject out-of-range straggler ids in EVERY driver. Historically
@@ -773,18 +863,202 @@ class ElasticRunner:
                     f"straggler id {int(s)} out of range: machine ids are "
                     f"0..{N - 1}")
 
-    def _derive_realized(self, durations: Dict[int, float]) -> Tuple[int, ...]:
+    # ------------------------------------------------------------------ #
+    # Unannounced-failure seams (repro.faults). Faults are consulted and
+    # consumed at each step's head; a fault the S budget cannot absorb
+    # raises FaultAbort BEFORE any state-mutating dispatch, so the caller's
+    # operand/carry stays valid and the step can re-execute after a replan.
+    # ------------------------------------------------------------------ #
+    def _consult_planning_faults(self, t: int) -> None:
+        """Fire planning-path faults scheduled at absolute step ``t``:
+        ``scheduler_kill`` tombstones the central master (the decentral
+        replica keeps the run alive), ``stale_plan_table`` drops every
+        replicated planning artifact. Both are consumed one-shot."""
+        inj = self.fault_injector
+        if inj is None:
+            return
+        from repro.faults.chaos import PLANNING_KINDS
+
+        for spec in inj.take(t, kinds=PLANNING_KINDS):
+            if spec.kind == "scheduler_kill":
+                if self.scheduler_killed:
+                    inj.record(spec, "noop", "scheduler already dead")
+                else:
+                    self.kill_scheduler(
+                        f"chaos: scheduler_kill before step {t}")
+                    inj.record(
+                        spec, "killed",
+                        f"central master tombstoned before step {t}")
+            else:  # stale_plan_table
+                n_plans = len(self._plan_cache)
+                n_table = self.invalidate_plan_state()
+                detail = f"dropped {n_plans} cached plan(s)"
+                if n_table:
+                    detail += f" + {n_table} table entr(ies)"
+                inj.record(spec, "invalidated", detail)
+
+    def _take_dispatch_faults(self, t: int):
+        """Consume the dispatch faults (crash / result drop) scheduled at
+        absolute step ``t``; a target outside the membership is a recorded
+        noop (it is already gone). Returns ``[(spec, worker), ...]``."""
+        inj = self.fault_injector
+        if inj is None:
+            return []
+        from repro.faults.chaos import DISPATCH_KINDS
+
+        out = []
+        for spec in inj.take(t, kinds=DISPATCH_KINDS):
+            n = int(spec.worker)
+            if n not in self._membership:
+                inj.record(spec, "noop",
+                           f"worker {n} not in the membership")
+                continue
+            out.append((spec, n))
+        return out
+
+    def _coverable(self, entry: _CacheEntry, bad: Set[int]) -> bool:
+        """Can this step proceed with every worker in ``bad`` silent? True
+        when the plan's S budget covers the set (include_mask finds a
+        surviving copy of every segment) AND at least one loaded worker
+        remains to be consumed."""
+        if not bad:
+            return True
+        if len(bad) > entry.stragglers:
+            return False
+        loaded = [n for n in self._membership
+                  if entry.block.n_blocks[n] > 0]
+        if len(set(loaded) - bad) < 1:
+            return False
+        try:
+            entry.step_plan.plan.include_mask(tuple(sorted(bad)))
+        except Exception:
+            return False
+        return True
+
+    def _resolve_lost(
+        self,
+        t: int,
+        entry: _CacheEntry,
+        dfaults,
+        injected: Optional[Tuple[int, ...]],
+    ) -> Tuple[int, ...]:
+        """Classify this step's dispatch faults against the S budget.
+
+        Covered: the lost workers become realized stragglers — the fault
+        is *masked* (and a crash queues its demotion for the caller).
+        Not covered: record the demotions and raise :class:`FaultAbort`
+        before anything dispatches — the caller demotes, replans, and
+        re-executes this step. Returns the loaded lost set to mask."""
+        from repro.faults.chaos import FaultAbort
+
+        inj = self.fault_injector
+        loaded = {n for n in self._membership
+                  if entry.block.n_blocks[n] > 0}
+        lost = tuple(sorted({n for _, n in dfaults if n in loaded}))
+        bad_all = set(injected or ()) | set(lost)
+        if self._coverable(entry, bad_all):
+            for spec, n in dfaults:
+                if n not in loaded:
+                    inj.record(spec, "noop",
+                               f"worker {n} holds no rows this step")
+                    continue
+                inj.record(
+                    spec, "masked",
+                    f"step {t}: silent worker {n} covered by S="
+                    f"{entry.stragglers}; realized straggler")
+                if spec.kind == "worker_crash":
+                    self.pending_demotions.add(n)
+            return lost
+        demote = tuple(sorted({n for _, n in dfaults}))
+        for spec, n in dfaults:
+            inj.record(
+                spec, "demoted",
+                f"step {t}: loss of worker {n} exceeds S="
+                f"{entry.stragglers}; abort, demote, replan, re-execute")
+        raise FaultAbort(
+            t, dfaults[0][0].kind, lost=lost, demote=demote,
+            detail=f"S={entry.stragglers} cannot cover {sorted(bad_all)}")
+
+    def _take_speed_loss(self, t: int) -> bool:
+        """Fire a scheduled ``speed_report_loss`` at absolute step ``t``:
+        the step's measured durations never reach the master, so its EWMA
+        feed is dropped by the caller. Output bits are already final —
+        this only perturbs future planning inputs. Returns True when a
+        loss fired (one-shot)."""
+        inj = self.fault_injector
+        if inj is None:
+            return False
+        fired = False
+        for spec in inj.take(t, kinds=("speed_report_loss",)):
+            inj.record(
+                spec, "report_dropped",
+                f"step {t}: measured durations lost in transit; "
+                f"EWMA update skipped")
+            fired = True
+        return fired
+
+    def _timeout_check(
+        self,
+        t: int,
+        entry: _CacheEntry,
+        durations: Dict[int, float],
+        already_bad: Set[int],
+    ) -> Tuple[int, ...]:
+        """Apply ``cfg.dispatch_timeout`` to modeled durations: workers
+        past the deadline are silent as far as this step's master is
+        concerned. Covered → returned (to mask as realized stragglers and
+        censor from the EWMA). Not covered → FaultAbort with the timed-out
+        set demoted (a worker this late is treated as dead)."""
+        timeout = self.cfg.dispatch_timeout
+        if timeout is None:
+            return ()
+        timed = tuple(sorted(
+            n for n, d in durations.items()
+            if d > timeout and n not in already_bad))
+        if not timed:
+            return ()
+        if not self._coverable(entry, already_bad | set(timed)):
+            from repro.faults.chaos import FaultAbort
+
+            raise FaultAbort(
+                t, "dispatch_timeout", lost=timed, demote=timed,
+                detail=f"worker(s) {list(timed)} exceeded "
+                       f"dispatch_timeout={timeout} beyond the S budget")
+        if self.fault_injector is not None:
+            from repro.faults.chaos import FaultSpec
+
+            for n in timed:
+                self.fault_injector.record(
+                    FaultSpec("result_drop", max(t, 0), worker=n),
+                    "masked",
+                    f"step {t}: worker {n} past dispatch_timeout="
+                    f"{timeout}; realized straggler",
+                    detect_s=float(timeout))
+        return timed
+
+    def _derive_realized(
+        self,
+        durations: Dict[int, float],
+        forced: Sequence[int] = (),
+    ) -> Tuple[int, ...]:
         """Realized straggler set from modeled arrival order: the master
         consumes the first ``n_loaded - S`` completions, so the slowest S
         loaded workers (ties broken by id) are this step's stragglers. At
-        least one worker is always consumed."""
+        least one worker is always consumed. ``forced`` pins workers whose
+        results are already known lost (faults/timeouts) into the set —
+        they spend budget first; only the remainder of S is derived from
+        arrival order."""
         S = self._master.stragglers
-        loaded = sorted(durations)
-        s_eff = min(S, max(len(loaded) - 1, 0))
-        if s_eff <= 0:
-            return ()
-        order = sorted(loaded, key=lambda n: (durations[n], n))
-        return tuple(sorted(int(n) for n in order[len(order) - s_eff:]))
+        forced = tuple(sorted({int(n) for n in forced}))
+        pool = sorted(set(durations) | set(forced))
+        s_eff = min(S, max(len(pool) - 1, 0))
+        extra = s_eff - len(forced)
+        if extra <= 0:
+            return forced
+        rest = [n for n in sorted(durations) if n not in set(forced)]
+        order = sorted(rest, key=lambda n: (durations[n], n))
+        derived = order[len(order) - extra:]
+        return tuple(sorted(set(forced) | {int(n) for n in derived}))
 
     def _winner_combine(
         self,
@@ -827,6 +1101,7 @@ class ElasticRunner:
         waste: int,
         t0: float,
         injected: Optional[Tuple[int, ...]],
+        lost: Tuple[int, ...] = (),
     ) -> Tuple[np.ndarray, StepReport]:
         """First-arrival step: per-worker dispatch, consume-first combine.
 
@@ -839,16 +1114,23 @@ class ElasticRunner:
         workers are measurements, not losses: every loaded duration feeds
         the EWMA. Modeled completion is the (n_loaded - S)-th order
         statistic — the barrier's max only at S=0.
+
+        ``lost`` (pre-classified, covered dispatch faults) are workers
+        whose partial never arrives: they are not dispatched, spend the S
+        budget first in the realized set, and are censored from the EWMA.
         """
         from .executor import refresh_include
 
         jnp = self._jnp
+        t = self._step
         slot_d, off_d, goff_d, _include0_d, nblk_d = entry.dev
         valid_d = entry.dev_valid
         replan_s = time.perf_counter() - t0
 
+        silent = set(lost)
         loaded = [
-            n for n in self._membership if entry.block.n_blocks[n] > 0
+            n for n in self._membership
+            if entry.block.n_blocks[n] > 0 and n not in silent
         ]
         w_dev = jnp.asarray(w)
         t1 = time.perf_counter()
@@ -866,10 +1148,23 @@ class ElasticRunner:
         self._last_step_wall = wall
 
         row_loads = entry.block_loads * self.rows_per_tile
+        # The clock still models EVERY loaded worker (the lost one was
+        # assigned its rows and the speed process must keep its cadence);
+        # censoring happens after the draw — the measurement never arrives.
         durations = self.clock.durations(row_loads, self._membership, wall)
-        realized = (
-            self._derive_realized(durations) if injected is None else injected
-        )
+        for n in silent:
+            durations.pop(n, None)
+        timed = self._timeout_check(
+            t, entry, durations, silent | set(injected or ()))
+        if timed:
+            silent |= set(timed)
+            for n in timed:
+                durations.pop(n, None)
+        forced = tuple(sorted(silent))
+        if injected is None:
+            realized = self._derive_realized(durations, forced=forced)
+        else:
+            realized = tuple(sorted(set(injected) | silent))
         # Host-side feasibility + winner weights: include_mask raises when a
         # segment lost every holder, exactly like the barrier path.
         include = refresh_include(
@@ -881,6 +1176,8 @@ class ElasticRunner:
             n: float(entry.block_loads[n]) for n in durations
         }
         self._pending_durations = durations
+        if self._take_speed_loss(t):
+            self._pending_loads, self._pending_durations = {}, {}
         skipped = set(realized)
         consumed = [d for n, d in durations.items() if n not in skipped]
         modeled = max(consumed) if consumed else 0.0
@@ -927,25 +1224,43 @@ class ElasticRunner:
         exactly one surviving holder per segment delivers. Raises
         ``ValueError`` on an out-of-range id and errors out if the set
         exceeds the plan's tolerance.
+
+        With a :attr:`fault_injector` installed, faults scheduled at this
+        step fire here: planning faults before the EWMA ingest, dispatch
+        faults (crash / result drop) classified against the S budget —
+        covered losses are masked as realized stragglers (censored from
+        the EWMA), uncovered losses raise
+        :class:`~repro.faults.chaos.FaultAbort` before anything
+        dispatches.
         """
         from .executor import refresh_include
 
         jnp = self._jnp
         if event is not None:
             self.apply_event(event)
+        t = self._step
+        self._consult_planning_faults(t)
         t0 = time.perf_counter()
         # Feed last step's measured durations into the EWMA (Alg. 1 line 4)
         # BEFORE planning, so the plan sees the freshest estimates.
         self.ingest_pending()
-        entry, cache_hit, replanned, waste = self._adopt_plan()
         injected: Optional[Tuple[int, ...]] = None
         if stragglers is not None:
             injected = tuple(sorted({int(s) for s in stragglers}))
             self._check_straggler_ids(injected)
+        lost: Tuple[int, ...] = ()
+        dfaults = self._take_dispatch_faults(t)
+        if dfaults:
+            # Peek the plan BEFORE adoption: an uncovered fault must abort
+            # with the plan/waste accounting untouched, so the re-executed
+            # step replans cleanly after the caller's demotion event.
+            peek, _ = self._plan_for(self._membership)
+            lost = self._resolve_lost(t, peek, dfaults, injected)
+        entry, cache_hit, replanned, waste = self._adopt_plan()
         if self.cfg.arrival == "first":
             return self._step_first(
-                w, entry, cache_hit, replanned, waste, t0, injected)
-        bad = injected or ()
+                w, entry, cache_hit, replanned, waste, t0, injected, lost)
+        bad = tuple(sorted(set(injected or ()) | set(lost)))
         slot_d, off_d, goff_d, include0_d, nblk_d = entry.dev
         include_d = (
             include0_d if not bad
@@ -967,12 +1282,40 @@ class ElasticRunner:
 
         row_loads = entry.block_loads * self.rows_per_tile
         durations = self.clock.durations(row_loads, self._membership, wall)
+        if lost:
+            # A silent worker's duration is censored — its result never
+            # arrived, so there is no measurement to feed the EWMA (a dead
+            # worker must not poison the estimates it can no longer match).
+            durations = {n: d for n, d in durations.items()
+                         if n not in set(lost)}
+        timed = self._timeout_check(t, entry, durations, set(bad))
+        if timed:
+            # Covered timeout: the barrier master gave up on the late
+            # workers and re-collected from the survivors — one recovery
+            # re-dispatch with the refreshed include weights (same bits:
+            # exactly one surviving copy of every segment delivers).
+            bad = tuple(sorted(set(bad) | set(timed)))
+            include_d = jnp.asarray(
+                refresh_include(entry.block, entry.step_plan.plan, bad))
+            t1b = time.perf_counter()
+            y = self._executor(
+                self._staged_dev,
+                slot_d, off_d, goff_d, include_d, nblk_d, jnp.asarray(w),
+            )
+            y.block_until_ready()
+            wall += time.perf_counter() - t1b
+            self.device_dispatches += 1
+            y = np.asarray(y)
+            durations = {n: d for n, d in durations.items()
+                         if n not in set(timed)}
         # The EWMA is fed tile-unit loads (the LP's unit), so estimated
         # speeds stay consistent with the planner; clocks see row units.
         self._pending_loads = {
             n: float(entry.block_loads[n]) for n in durations
         }
         self._pending_durations = durations
+        if self._take_speed_loss(t):
+            self._pending_loads, self._pending_durations = {}, {}
         modeled = max(durations.values()) if durations else 0.0
 
         if self.cfg.verify:
@@ -1131,10 +1474,22 @@ class ElasticRunner:
         bad = np.zeros((K, N), dtype=bool)
         metas = []
         had_miss = False
+        base = self._step
         for k in range(n_active):
             t0 = time.perf_counter()
+            tk = base + k
             if events[k] is not None:
                 self.apply_event(events[k])
+            # Fault seams fire at assembly time, per step: nothing has
+            # dispatched yet, so an uncovered loss aborts the WHOLE window
+            # cleanly (FaultAbort) with the carry untouched — the engine
+            # demotes, replans, and re-assembles from this window's head.
+            self._consult_planning_faults(tk)
+            dfaults = self._take_dispatch_faults(tk)
+            forced: Tuple[int, ...] = ()
+            if dfaults:
+                peek, _ = self._plan_for(self._membership)
+                forced = self._resolve_lost(tk, peek, dfaults, sets[k])
             entry, cache_hit, replanned, waste = self._adopt_plan()
             had_miss = had_miss or not cache_hit
             durs_k = None
@@ -1145,15 +1500,26 @@ class ElasticRunner:
                     # before dispatch, so the clock is sampled here (once
                     # per step, in step order — the cadence the stepwise
                     # path uses) against the previous dispatch's per-step
-                    # wall as the wall estimate.
+                    # wall as the wall estimate. Silent workers are drawn
+                    # (cadence) then censored (no measurement arrives).
                     row_loads = entry.block_loads * self.rows_per_tile
                     durs_k = self.clock.durations(
                         row_loads, self._membership, self._last_step_wall)
-                    sets[k] = self._derive_realized(durs_k)
+                    for n in forced:
+                        durs_k.pop(n, None)
+                    timed = self._timeout_check(
+                        tk, entry, durs_k, set(forced))
+                    if timed:
+                        forced = tuple(sorted(set(forced) | set(timed)))
+                        for n in timed:
+                            durs_k.pop(n, None)
+                    sets[k] = self._derive_realized(durs_k, forced=forced)
                 else:
-                    sets[k] = ()
+                    sets[k] = tuple(forced)
             else:
                 self._check_straggler_ids(sets[k])
+                if forced:
+                    sets[k] = tuple(sorted(set(sets[k]) | set(forced)))
             if sets[k]:
                 # Host-side feasibility check (the device gather cannot
                 # raise): include_mask errors out when a segment lost every
@@ -1161,7 +1527,7 @@ class ElasticRunner:
                 entry.step_plan.plan.include_mask(sets[k])
                 bad[k, list(sets[k])] = True
             metas.append((self._membership, entry, replanned, cache_hit,
-                          time.perf_counter() - t0, waste, durs_k))
+                          time.perf_counter() - t0, waste, durs_k, forced))
         # Pad inactive tail slots with the last entry's arrays (masked out
         # in-graph) so the window's shapes never change. The stacked plan
         # buffers are cached ON DEVICE in a small LRU keyed by the
@@ -1237,11 +1603,20 @@ class ElasticRunner:
         for k in range(n_active):
             entry = metas[k][1]
             durs = metas[k][6]
+            forced_k = metas[k][7]
             if durs is None:
                 row_loads = entry.block_loads * self.rows_per_tile
                 durs = self.clock.durations(
                     row_loads, metas[k][0], per_step_wall)
+                for n in forced_k:
+                    # Censor silent workers (covered faults): their result
+                    # — and therefore their measurement — never arrived.
+                    durs.pop(n, None)
             per_step_durs.append(durs)
+            if self._take_speed_loss(base + k):
+                # This step's report was lost in transit: its durations
+                # stay out of the window's accumulated EWMA feed.
+                continue
             for n, d in durs.items():
                 loads_sum[n] = loads_sum.get(n, 0.0) \
                     + float(entry.block_loads[n])
@@ -1254,8 +1629,8 @@ class ElasticRunner:
                 self._verify(ys[k], ws[k])
 
         reports = []
-        for k, (avail, entry, replanned, cache_hit, replan_s, waste, _d) \
-                in enumerate(metas):
+        for k, (avail, entry, replanned, cache_hit, replan_s, waste, _d,
+                _f) in enumerate(metas):
             self._step += 1
             durs = per_step_durs[k]
             if self.cfg.arrival == "first":

@@ -43,6 +43,13 @@ class ServerMetrics:
         self.idle_polls = 0
         self.stalled_polls = 0
         self.queue_depth_max = 0
+        # Fault/degradation telemetry (fed by the server's recovery path).
+        self.faults = 0
+        self.requeued = 0
+        self.failed = 0
+        self.backoff_polls = 0
+        self.shed_events = 0
+        self.restored_events = 0
         self.batches = 0
         self.batch_requests: List[int] = []
         self.batch_cols_used: List[int] = []
@@ -75,6 +82,26 @@ class ServerMetrics:
 
     def on_stall(self) -> None:
         self.stalled_polls += 1
+
+    def on_fault(self, requeued: int, failed: int) -> None:
+        """One fault-aborted dispatch: ``requeued`` requests went back to
+        the queue head, ``failed`` exhausted their retry budget."""
+        self.faults += 1
+        self.requeued += int(requeued)
+        self.failed += int(failed)
+
+    def on_backoff(self) -> None:
+        """A poll refused to dispatch because the queue head's
+        ``not_before`` (retry backoff) has not passed yet."""
+        self.backoff_polls += 1
+
+    def on_shed(self) -> None:
+        """Degraded mode lowered the straggler tolerance to keep serving."""
+        self.shed_events += 1
+
+    def on_restore(self) -> None:
+        """The fleet recovered; the base straggler tolerance is back."""
+        self.restored_events += 1
 
     def on_batch(self, n_requests: int, cols_used: int) -> None:
         self.batches += 1
@@ -146,5 +173,13 @@ class ServerMetrics:
                 "count": self.windows,
                 "steps": self.window_steps,
                 "modeled_device_time": self.modeled_device_time,
+            },
+            "faults": {
+                "count": self.faults,
+                "requeued": self.requeued,
+                "failed": self.failed,
+                "backoff_polls": self.backoff_polls,
+                "shed_events": self.shed_events,
+                "restored_events": self.restored_events,
             },
         }

@@ -25,7 +25,12 @@ LINEAR_KINDS: Tuple[str, ...] = ("matvec", "matmat")
 class Request:
     """One admitted query. ``cols`` is its column footprint in a coalesced
     batch (1 for matvec, c for an (r, c) matmat, 0 for mapreduce — which
-    dispatches alone). ``deadline`` is absolute server-clock time."""
+    dispatches alone). ``deadline`` is absolute server-clock time.
+
+    ``retries`` counts fault-aborted dispatches this request survived
+    (each one requeued it at the front); ``not_before`` is the absolute
+    server-clock time before which the scheduler must not re-dispatch it
+    (the exponential-backoff gate, None = immediately eligible)."""
 
     rid: int
     kind: str
@@ -35,6 +40,8 @@ class Request:
     deadline: Optional[float] = None
     t_dispatch: Optional[float] = None
     t_complete: Optional[float] = None
+    retries: int = 0
+    not_before: Optional[float] = None
 
 
 @dataclass
@@ -53,11 +60,15 @@ class Response:
     """One finished (or refused) query.
 
     status: ``"ok"`` (result holds the answer), ``"expired"`` (deadline
-    passed before dispatch; dropped un-run), or ``"rejected"`` (the async
+    passed before dispatch; dropped un-run), ``"rejected"`` (the async
     wrapper's queue-full answer — the sync path signals rejection via
-    :class:`Ticket`). ``deadline_missed`` marks an ``"ok"`` response that
-    completed after its deadline: the work was not wasted, but goodput
-    accounting excludes it.
+    :class:`Ticket`), ``"failed"`` (the request's dispatch fault-aborted
+    more than ``ServeConfig.max_retries`` times; ``meta`` names the last
+    fault), or ``"shutdown"`` (the async wrapper closed while the
+    request was still pending — terminal, nothing ran).
+    ``deadline_missed`` marks an ``"ok"`` response that completed after
+    its deadline: the work was not wasted, but goodput accounting
+    excludes it.
     """
 
     rid: int

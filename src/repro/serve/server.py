@@ -48,6 +48,7 @@ import numpy as np
 from repro.api import ElasticEngine, EngineConfig, MatMat, Policy
 from repro.core.elastic import ElasticEvent
 from repro.core.placement import LostTileError, Placement
+from repro.faults import FaultAbort
 
 from .batcher import Batch, Coalescer
 from .metrics import ServerMetrics
@@ -107,12 +108,30 @@ class ServeConfig:
     latency_scale: clock units per modeled-completion unit when
       advancing a :class:`SyntheticClock` past a dispatch (real clocks
       ignore it — time advances by itself).
+    max_retries: fault-aborted dispatches one request survives before
+      the server answers ``"failed"`` instead of requeueing it (the
+      abort fires BEFORE the dispatch mutates anything, so a requeue is
+      idempotent — the request re-dispatches bit-identical).
+    retry_backoff: base of the exponential re-dispatch delay after a
+      fault: a request on its k-th retry is not re-dispatched before
+      ``retry_backoff * 2**(k-1)`` clock units have passed (0 = retry
+      on the next poll).
+    degraded: what an unserveable-but-reachable fleet does to the queue.
+      ``"stall"`` (default): requests wait for re-arrival, the paper's
+      announced-churn behaviour. ``"shed"``: the server lowers every
+      lane's straggler tolerance to the largest S the surviving holders
+      still cover and keeps serving — degraded fault tolerance instead
+      of unavailability — restoring the configured S when the fleet
+      recovers.
     """
 
     batch_cols: int = 8
     max_queue: int = 64
     default_deadline: Optional[float] = None
     latency_scale: float = 1.0
+    max_retries: int = 2
+    retry_backoff: float = 0.0
+    degraded: str = "stall"
 
     def __post_init__(self):
         if self.batch_cols < 1:
@@ -121,6 +140,15 @@ class ServeConfig:
         if self.max_queue < 1:
             raise ValueError(
                 f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff < 0:
+            raise ValueError(
+                f"retry_backoff must be >= 0, got {self.retry_backoff}")
+        if self.degraded not in ("stall", "shed"):
+            raise ValueError(
+                f"degraded must be 'stall' or 'shed', got {self.degraded!r}")
 
 
 class ElasticServer:
@@ -140,6 +168,12 @@ class ElasticServer:
         :class:`~repro.runtime.elastic_runner.SyntheticSpeedClock`).
       n_machines / placement: fleet shape, as for
         :class:`~repro.api.engine.ElasticEngine`.
+      fault_injector: a :class:`~repro.faults.FaultInjector` installed on
+        the linear lane's runner (chaos testing). Injected faults the S
+        budget covers are masked inside the dispatch; uncovered ones
+        abort it (:class:`~repro.faults.FaultAbort`) and the server
+        demotes the lost workers, requeues the batch idempotently, and
+        re-dispatches under the retry budget.
     """
 
     def __init__(
@@ -155,6 +189,7 @@ class ElasticServer:
         placement: Optional[Placement] = None,
         mesh=None,
         worker_axis: str = "data",
+        fault_injector=None,
     ):
         self.cfg = serve_cfg
         self.clock = clock if clock is not None else RealClock()
@@ -183,6 +218,14 @@ class ElasticServer:
             mr.prepare(data)
             mr.runner.add_completion_callback(self.metrics.on_window)
             self._lanes["mapreduce"] = mr
+        self.fault_injector = fault_injector
+        if fault_injector is not None:
+            self._lanes["linear"].runner.fault_injector = fault_injector
+        self._base_stragglers = {
+            name: eng.runner.planning_master.stragglers
+            for name, eng in self._lanes.items()
+        }
+        self._shed = False
         self._coalescer = Coalescer(self.operand_rows, serve_cfg.batch_cols)
         self._queue: Deque[Request] = deque()
         self._available = set(range(self.placement.n_machines))
@@ -330,26 +373,35 @@ class ElasticServer:
         if not self._queue:
             self.metrics.on_idle()
             return out
-        if not self.serveable():
-            self.metrics.on_stall()
+        head = self._queue[0]
+        if head.not_before is not None and now < head.not_before:
+            self.metrics.on_backoff()
             return out
+        if self._shed:
+            self._maybe_restore()
+        if not self.serveable():
+            if not (self.cfg.degraded == "shed" and self._maybe_shed()):
+                self.metrics.on_stall()
+                return out
         batch = self._coalescer.pack(self._queue)
         out.extend(self._dispatch(batch))
         return out
 
     def drain(self, max_polls: Optional[int] = None) -> List[Response]:
-        """Poll until the queue empties, the fleet stalls, or
-        ``max_polls`` is hit. Stalled requests stay queued — feed an
-        arrival and drain again."""
+        """Poll until the queue empties, the fleet stalls (or the head
+        request is backoff-gated), or ``max_polls`` is hit. Stalled
+        requests stay queued — feed an arrival and drain again."""
         out: List[Response] = []
         polls = 0
+        m = self.metrics
         while self._queue:
             if max_polls is not None and polls >= max_polls:
                 break
-            if not self.serveable():
-                break
+            idle = (m.stalled_polls, m.backoff_polls, m.idle_polls)
             out.extend(self.poll())
             polls += 1
+            if (m.stalled_polls, m.backoff_polls, m.idle_polls) != idle:
+                break  # this poll went nowhere; only time/churn unblocks it
         return out
 
     def _dispatch(self, batch: Batch) -> List[Response]:
@@ -358,7 +410,11 @@ class ElasticServer:
         t_dispatch = self.clock.now()
         for req in batch.requests:
             req.t_dispatch = t_dispatch
-        result, reports = engine.submit(batch.operand, event=ev)
+        try:
+            result, reports = engine.submit(batch.operand, event=ev)
+        except FaultAbort as fa:
+            return self._on_fault(batch, fa, t_dispatch)
+        self._drain_demotions(engine)
         modeled = self.cfg.latency_scale * float(
             sum(r.modeled_completion for r in reports))
         if hasattr(self.clock, "advance"):
@@ -387,6 +443,98 @@ class ElasticServer:
                 t_complete=t_complete,
             ))
         return out
+
+    # ------------------------------------------------------------------ #
+    # Unannounced-failure recovery
+    # ------------------------------------------------------------------ #
+    def _on_fault(self, batch: Batch, fa: FaultAbort,
+                  now: float) -> List[Response]:
+        """An uncovered fault aborted the dispatch. The abort fires
+        BEFORE the dispatch mutates engine state and before any response
+        was emitted, so requeueing the batch at the queue head is
+        idempotent: the retry re-dispatches the same queries bit for bit.
+        The lost workers are demoted (announced-preemption bookkeeping);
+        a request past ``max_retries`` gets a terminal ``"failed"``
+        response; survivors pick up an exponential-backoff ``not_before``
+        when ``retry_backoff`` is set."""
+        if fa.demote:
+            self.feed_event(preempted=fa.demote)
+        out: List[Response] = []
+        kept: List[Request] = []
+        for req in batch.requests:
+            req.retries += 1
+            req.t_dispatch = None
+            if req.retries > self.cfg.max_retries:
+                out.append(Response(
+                    rid=req.rid, kind=req.kind, status="failed",
+                    t_enqueue=req.t_enqueue,
+                    meta={"fault": fa.kind, "step": fa.step,
+                          "lost": list(fa.lost),
+                          "retries": req.retries},
+                ))
+            else:
+                if self.cfg.retry_backoff > 0:
+                    req.not_before = now + self.cfg.retry_backoff * (
+                        2.0 ** (req.retries - 1))
+                kept.append(req)
+        self._queue.extendleft(reversed(kept))
+        self.metrics.on_fault(requeued=len(kept), failed=len(out))
+        return out
+
+    def _drain_demotions(self, engine: ElasticEngine) -> None:
+        """Covered crashes mask the step but still kill the worker: the
+        runner parks them in ``pending_demotions``; fold them into the
+        server's availability so every lane sees the loss at its next
+        dispatch."""
+        pend = getattr(engine.runner, "pending_demotions", None)
+        if pend:
+            self.feed_event(preempted=sorted(pend))
+            pend.clear()
+
+    def _min_cover(self) -> int:
+        """Live holders of the thinnest tile (0 when a tile is lost
+        outright — no straggler tolerance makes that fleet serveable)."""
+        if not self._available:
+            return 0
+        try:
+            self.placement.restrict(self.available)
+        except LostTileError:
+            return 0
+        avail = self._available
+        return min(
+            sum(n in avail for n in hs) for hs in self.placement.holders)
+
+    def _maybe_shed(self) -> bool:
+        """Degraded mode: drop every lane's straggler tolerance to what
+        the surviving holders still cover, so the queue keeps moving with
+        reduced fault tolerance instead of stalling. Returns True when
+        the fleet is serveable afterwards."""
+        cover = self._min_cover()
+        if cover < 1:
+            return False
+        s_fit = cover - 1
+        changed = False
+        for eng in self._lanes.values():
+            if eng.runner.planning_master.stragglers > s_fit:
+                eng.runner.set_stragglers(s_fit)
+                changed = True
+        if changed:
+            self._shed = True
+            self.metrics.on_shed()
+        return self.serveable()
+
+    def _maybe_restore(self) -> None:
+        """Undo a shed once the fleet covers the configured tolerance
+        again (re-arrivals): every lane returns to its base S."""
+        cover = self._min_cover()
+        if cover < 1 + max(self._base_stragglers.values()):
+            return
+        for name, eng in self._lanes.items():
+            if eng.runner.planning_master.stragglers \
+                    != self._base_stragglers[name]:
+                eng.runner.set_stragglers(self._base_stragglers[name])
+        self._shed = False
+        self.metrics.on_restore()
 
     # ------------------------------------------------------------------ #
     @property
@@ -435,28 +583,46 @@ class AsyncElasticServer:
 
     async def request(self, kind: str, operand: Any = None,
                       deadline: Optional[float] = None) -> Response:
+        if self._closed:
+            return Response(rid=-1, kind=kind, status="shutdown")
         ticket = self.server.submit(kind, operand, deadline=deadline)
         if not ticket.admitted:
             return Response(rid=ticket.rid, kind=kind, status="rejected",
                             retry_after=ticket.retry_after)
         loop = self._asyncio.get_running_loop()
         fut = loop.create_future()
-        self._waiters[ticket.rid] = fut
+        self._waiters[ticket.rid] = (fut, kind)
         return await fut
 
     async def run(self) -> None:
         """Serve until :meth:`close`; resolves waiters as responses
-        arrive."""
-        while not self._closed:
-            responses = self.server.poll()
-            for resp in responses:
-                fut = self._waiters.pop(resp.rid, None)
-                if fut is not None and not fut.done():
-                    fut.set_result(resp)
-            if not responses and self.server.queue_depth == 0:
-                await self._asyncio.sleep(self.idle_sleep)
-            else:
-                await self._asyncio.sleep(0)
+        arrive. On exit — close, or any escaping exception — every
+        still-pending waiter resolves with a terminal ``"shutdown"``
+        response, so no caller awaits forever."""
+        try:
+            while not self._closed:
+                responses = self.server.poll()
+                for resp in responses:
+                    entry = self._waiters.pop(resp.rid, None)
+                    if entry is not None and not entry[0].done():
+                        entry[0].set_result(resp)
+                if not responses and self.server.queue_depth == 0:
+                    await self._asyncio.sleep(self.idle_sleep)
+                else:
+                    await self._asyncio.sleep(0)
+        finally:
+            self._fail_pending()
 
     def close(self) -> None:
+        """Stop serving. Terminal for every pending request: each one
+        resolves with a ``"shutdown"`` response immediately — not on the
+        run loop's next iteration, which may never come."""
         self._closed = True
+        self._fail_pending()
+
+    def _fail_pending(self) -> None:
+        waiters, self._waiters = self._waiters, {}
+        for rid, (fut, kind) in waiters.items():
+            if not fut.done():
+                fut.set_result(
+                    Response(rid=rid, kind=kind, status="shutdown"))

@@ -157,3 +157,115 @@ def test_launch_serve_shim_warns_and_delegates():
         with pytest.raises(SystemExit) as exc:
             serve.main([])
     assert exc.value.code == 2
+
+
+# ---------------------------------------------------------------------- #
+# Property tests: the checkpoint substrate and full-engine resume
+# ---------------------------------------------------------------------- #
+from _hypothesis_compat import given, strategies as st
+
+_LEAF_DTYPES = ("float64", "float32", "bfloat16", "int32")
+
+
+@given(
+    outer=st.sampled_from(_LEAF_DTYPES),
+    inner=st.sampled_from(_LEAF_DTYPES),
+    on_device=st.booleans(),
+    step=st.integers(min_value=0, max_value=10**9),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_checkpoint_roundtrip_property(outer, inner, on_device, step, seed):
+    """Any nested tree of f64/f32/bf16/i32 leaves — host numpy or jax
+    device arrays — round-trips bitwise through save/restore, whatever
+    step it was stamped with. (bf16 widens to f32 on disk; f32 -> bf16
+    is exact on the way back, so even that path loses nothing.)"""
+    import shutil
+    import tempfile
+
+    import ml_dtypes
+
+    rng = np.random.default_rng(seed)
+
+    def leaf(dtype, shape):
+        if dtype == "int32":
+            a = rng.integers(-10**6, 10**6, size=shape, dtype=np.int32)
+        elif dtype == "bfloat16":
+            a = rng.standard_normal(shape).astype(ml_dtypes.bfloat16)
+        else:
+            a = rng.standard_normal(shape).astype(np.dtype(dtype))
+        if on_device:
+            import jax.numpy as jnp
+            return jnp.asarray(a)
+        return a
+
+    tree = {
+        "w": leaf(outer, (3, 4)),
+        "nested": {"b": leaf(inner, (7,)), "deep": {"c": leaf(outer, (2,))}},
+    }
+    d = tempfile.mkdtemp()
+    try:
+        path = save_checkpoint(d, step, tree, extra={"stamp": step})
+        got_step, got, extra = restore_checkpoint(path, tree)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    assert got_step == step and extra == {"stamp": step}
+    pairs = [(tree["w"], got["w"]),
+             (tree["nested"]["b"], got["nested"]["b"]),
+             (tree["nested"]["deep"]["c"], got["nested"]["deep"]["c"])]
+    for want, have in pairs:
+        w_np, h_np = np.asarray(want), np.asarray(have)
+        assert h_np.dtype == w_np.dtype
+        assert h_np.tobytes() == w_np.tobytes()
+
+
+@given(
+    fuse=st.sampled_from((1, 4)),
+    cut=st.sampled_from((3, 5)),
+)
+def test_engine_save_state_resume_bitwise_property(fuse, cut, _cache={}):
+    """The full-engine drill as a property over cut points: run `cut`
+    steps, snapshot the COMPLETE resumable state (iterate, EWMA, plan
+    cache keys, clock RNG, pending measurements), resume in a FRESH
+    engine, finish — bitwise-equal to the uninterrupted run. cut=5 with
+    fuse=4 lands mid-window (the resumed run re-tiles its windows);
+    every (fuse, cut) pair is a mid-trace cut for the EWMA/plan state.
+    Each example is a subprocess; the tiny domain keeps this tractable
+    under both real hypothesis and the fallback sampler."""
+    if (fuse, cut) in _cache:
+        return
+    _cache[(fuse, cut)] = True
+    out = run_with_devices("""
+import numpy as np
+from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+import tempfile
+
+BASE = [1000., 1400., 1900., 2600.]
+X = make_exact_matrix(4 * 96, 0)
+FUSE, CUT = %d, %d
+
+def engine():
+    return ElasticEngine(
+        MatVecPowerIteration(seed=0),
+        Policy(placement="cyclic", replication=3, stragglers=1),
+        EngineConfig(block_rows=16, verify="exact",
+                     initial_speeds=tuple(BASE), fuse_steps=FUSE),
+        backend="device", n_machines=4,
+        clock=SyntheticSpeedClock(BASE, jitter_sigma=0.1, seed=0))
+
+clean = engine().run(X, n_steps=9)
+
+e1 = engine()
+e1.run(X, n_steps=CUT)
+d = tempfile.mkdtemp()
+e1.save_state(d)
+
+e2 = engine()
+step, w = e2.resume(d, data=X)
+assert step == CUT, (step, CUT)
+res = e2.run(n_steps=9 - CUT, operand=w)
+assert np.array_equal(res.result.eigvec, clean.result.eigvec)
+assert res.result.residuals == clean.result.residuals[CUT:]
+print("RESUME_PROP_OK")
+""" % (fuse, cut), n_devices=4)
+    assert "RESUME_PROP_OK" in out

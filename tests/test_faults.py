@@ -1,0 +1,575 @@
+"""Unannounced-failure tolerance: chaos injection, recovery, degradation.
+
+Four layers of coverage:
+
+- **Pure units** (no devices): ``FaultSpec``/``ChaosPlan`` validation and
+  deterministic generation, the ``FaultInjector``'s base-step shifting and
+  one-shot consumption, and the new config knobs (dispatch timeout, retry
+  budgets, checkpoint cadence, degraded mode) failing loudly at
+  construction.
+- **Recovery proofs** (subprocess, 4 forced host devices): every covered
+  fault kind — composed with ``arrival`` ∈ {barrier, first} ×
+  ``fuse_steps`` ∈ {1, 4} — finishes **bitwise-equal** to the clean
+  reference run with the jit cache still at one entry; an *uncovered*
+  crash aborts the dispatch, demotes the worker, replans, re-executes,
+  and still matches the clean run's bits (every output row is computed
+  by exactly one holder from identical staged bits, so recovery is
+  plan-invariant); a dispatch timeout turns a silent worker into a
+  realized straggler.
+- **Plan-cache exception safety**: a raise mid-compile leaves no
+  half-built cache entry — the failed key recompiles cleanly on retry
+  (the satellite regression).
+- **Serving-layer degradation** (subprocess): a fault-aborted window
+  requeues its coalesced requests idempotently (retry bitwise-equal to
+  an unfaulted server), a blown retry budget turns terminal ``"failed"``,
+  exponential backoff gates re-dispatch, and degraded mode sheds S (and
+  restores it on re-arrival) instead of stalling.
+
+The tier-1 sweep here runs a reduced composition grid; the full
+5 kinds × 2 arrivals × 2 fusings acceptance grid is the
+``@pytest.mark.slow`` nightly chaos job.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.api import EngineConfig
+from repro.faults import (
+    DISPATCH_KINDS,
+    FAULT_KINDS,
+    ChaosPlan,
+    FaultAbort,
+    FaultInjector,
+    FaultRecord,
+    FaultSpec,
+)
+from repro.runtime.elastic_runner import RunnerConfig
+from repro.serve import ServeConfig
+
+
+# ---------------------------------------------------------------------- #
+# FaultSpec / ChaosPlan units
+# ---------------------------------------------------------------------- #
+def test_fault_spec_validates_kind_step_and_worker():
+    spec = FaultSpec("worker_crash", 3, worker=1)
+    assert (spec.kind, spec.step, spec.worker) == ("worker_crash", 3, 1)
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("meteor_strike", 0)
+    with pytest.raises(ValueError, match="step"):
+        FaultSpec("scheduler_kill", -1)
+    with pytest.raises(ValueError, match="worker="):
+        FaultSpec("result_drop", 0)          # dispatch kind needs a target
+    with pytest.raises(ValueError, match="drop worker="):
+        FaultSpec("scheduler_kill", 0, worker=2)
+
+
+def test_chaos_plan_sorts_validates_and_indexes():
+    plan = ChaosPlan([
+        FaultSpec("scheduler_kill", 5),
+        FaultSpec("worker_crash", 1, worker=0),
+        FaultSpec("result_drop", 1, worker=3),
+    ])
+    assert [f.step for f in plan] == [1, 1, 5]
+    assert len(plan) == 3 and plan.max_step == 5
+    assert {f.kind for f in plan.faults_at(1)} == \
+        {"worker_crash", "result_drop"}
+    assert plan.faults_at(2) == ()
+    with pytest.raises(TypeError, match="FaultSpec"):
+        ChaosPlan([("worker_crash", 1)])
+    assert ChaosPlan().max_step == -1
+
+
+def test_chaos_plan_generate_is_seed_deterministic():
+    a = ChaosPlan.generate(20, 4, n_faults=5, seed=7)
+    b = ChaosPlan.generate(20, 4, n_faults=5, seed=7)
+    c = ChaosPlan.generate(20, 4, n_faults=5, seed=8)
+    assert a.faults == b.faults
+    assert a.faults != c.faults
+    assert len(a) == 5
+    steps = [f.step for f in a]
+    assert steps == sorted(steps) and len(set(steps)) == 5
+    for f in a:
+        assert f.kind in FAULT_KINDS
+        assert (f.worker is not None) == (f.kind in DISPATCH_KINDS)
+        if f.worker is not None:
+            assert 0 <= f.worker < 4
+    # n_faults clamps to n_steps; invalid shapes raise.
+    assert len(ChaosPlan.generate(2, 4, n_faults=9, seed=0)) == 2
+    with pytest.raises(ValueError, match="n_steps"):
+        ChaosPlan.generate(0, 4)
+    with pytest.raises(ValueError, match="kinds"):
+        ChaosPlan.generate(4, 4, kinds=("worker_crash", "bad_kind"))
+
+
+# ---------------------------------------------------------------------- #
+# FaultInjector units
+# ---------------------------------------------------------------------- #
+def test_injector_base_step_shift_and_one_shot_take():
+    plan = ChaosPlan([FaultSpec("worker_crash", 2, worker=1),
+                      FaultSpec("speed_report_loss", 2)])
+    inj = FaultInjector(plan, base_step=10)
+    assert inj.pending == 2
+    assert not inj.has_fault(2)            # plan indices shifted by base
+    assert inj.has_fault(12)
+    assert inj.has_fault(12, kinds=("worker_crash",))
+    assert not inj.has_fault(12, kinds=("scheduler_kill",))
+    taken = inj.take(12, kinds=("worker_crash",))
+    assert [f.kind for f in taken] == ["worker_crash"]
+    assert inj.has_fault(12)               # the other kind still waits
+    assert inj.take(12) and not inj.has_fault(12)
+    assert inj.take(12) == []              # one-shot: consumed is gone
+    assert inj.pending == 0
+
+
+def test_injector_add_and_coerce():
+    inj = FaultInjector(base_step=5)
+    inj.add(FaultSpec("scheduler_kill", 1))           # relative: fires at 6
+    inj.add(FaultSpec("scheduler_kill", 1), absolute=True)
+    assert inj.has_fault(6) and inj.has_fault(1)
+    assert FaultInjector.coerce(None) is None
+    assert FaultInjector.coerce(inj) is inj           # used as-is
+    from_plan = FaultInjector.coerce(
+        ChaosPlan([FaultSpec("scheduler_kill", 0)]), base_step=3)
+    assert from_plan.has_fault(3)
+    from_iter = FaultInjector.coerce([FaultSpec("scheduler_kill", 2)])
+    assert from_iter.has_fault(2)
+
+
+def test_injector_records_and_counts_by_action():
+    inj = FaultInjector(detect_latency=0.25)
+    spec = FaultSpec("worker_crash", 0, worker=1)
+    rec = inj.record(spec, "masked", detail="covered by S")
+    assert isinstance(rec, FaultRecord)
+    assert rec.detect_s == 0.25            # defaults to the modeled latency
+    inj.record(spec, "demoted", detect_s=1.5)
+    assert inj.log[-1].detect_s == 1.5
+    assert inj.fired() == 2
+    assert inj.fired("masked") == 1 and inj.fired("noop") == 0
+
+
+def test_fault_abort_carries_recovery_payload():
+    fa = FaultAbort(4, "worker_crash", lost=[3, 1], demote=[1], detail="x")
+    assert (fa.step, fa.kind) == (4, "worker_crash")
+    assert fa.lost == (1, 3) and fa.demote == (1,)
+    assert "demote [1]" in str(fa) and "(x)" in str(fa)
+
+
+# ---------------------------------------------------------------------- #
+# Config validation units
+# ---------------------------------------------------------------------- #
+def test_new_config_knobs_validate_at_construction():
+    with pytest.raises(ValueError, match="dispatch_timeout"):
+        RunnerConfig(dispatch_timeout=0.0)
+    with pytest.raises(ValueError, match="dispatch_timeout"):
+        EngineConfig(dispatch_timeout=-1.0)
+    with pytest.raises(ValueError, match="max_fault_retries"):
+        EngineConfig(max_fault_retries=-1)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        EngineConfig(checkpoint_every=0, checkpoint_dir="/tmp/x")
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        EngineConfig(checkpoint_every=5)          # cadence without a dir
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        EngineConfig(checkpoint_on_fault=True)
+    with pytest.raises(ValueError, match="max_retries"):
+        ServeConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        ServeConfig(retry_backoff=-0.5)
+    with pytest.raises(ValueError, match="degraded"):
+        ServeConfig(degraded="panic")
+
+
+# ---------------------------------------------------------------------- #
+# Engine recovery proofs (subprocess, 4 forced host devices)
+# ---------------------------------------------------------------------- #
+_PRELUDE = """
+import numpy as np
+from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+from repro.faults import ChaosPlan, FaultInjector, FaultSpec
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+BASE = [1000., 1400., 1900., 2600.]
+X = make_exact_matrix(4 * 96, 0)
+
+def engine(arrival="barrier", fuse=1, stragglers=1, replan="central", **cfg):
+    return ElasticEngine(
+        MatVecPowerIteration(seed=0),
+        Policy(placement="cyclic", replication=3, stragglers=stragglers,
+               replan=replan),
+        EngineConfig(block_rows=16, verify="exact",
+                     initial_speeds=tuple(BASE), arrival=arrival,
+                     fuse_steps=fuse, **cfg),
+        backend="device", n_machines=4,
+        clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0))
+
+def run(arrival, fuse, faults=None, n_steps=8, **kw):
+    return engine(arrival=arrival, fuse=fuse, **kw).run(
+        X, n_steps=n_steps, faults=faults)
+"""
+
+
+def test_covered_faults_bitwise_equal_to_clean_run():
+    """The tier-1 acceptance sweep (reduced grid): each covered fault
+    kind, injected mid-run, finishes bitwise-equal to the clean run with
+    one jit entry. scheduler_kill composes with decentral re-planning
+    (central mode's death is terminal by design — tested below)."""
+    out = run_with_devices(_PRELUDE + """
+KINDS = [
+    ("worker_crash", dict(worker=2), "masked", {}),
+    ("result_drop", dict(worker=2), "masked", {}),
+    ("speed_report_loss", {}, "report_dropped", {}),
+    ("stale_plan_table", {}, "invalidated", {}),
+    ("scheduler_kill", {}, "killed", dict(replan="decentral")),
+]
+for arrival, fuse in [("barrier", 1), ("first", 4)]:
+    for kind, target, action, kw in KINDS:
+        clean = run(arrival, fuse, **kw)
+        plan = ChaosPlan([FaultSpec(kind, 3, **target)])
+        fault = run(arrival, fuse, faults=plan, **kw)
+        assert np.array_equal(fault.result.eigvec, clean.result.eigvec), \\
+            (kind, arrival, fuse)
+        assert fault.result.residuals == clean.result.residuals, \\
+            (kind, arrival, fuse)
+        assert fault.executor_cache_size == 1, (kind, arrival, fuse)
+        actions = [r.action for r in fault.fault_records]
+        assert actions == [action], (kind, arrival, fuse, actions)
+        assert fault.recoveries == 0
+print("COVERED_OK")
+""", n_devices=4)
+    assert "COVERED_OK" in out
+
+
+@pytest.mark.slow
+def test_covered_faults_full_acceptance_grid():
+    """The nightly chaos sweep: the FULL kind × arrival × fuse grid,
+    plus a multi-fault seeded schedule per combo."""
+    out = run_with_devices(_PRELUDE + """
+KINDS = [
+    ("worker_crash", dict(worker=2), dict()),
+    ("result_drop", dict(worker=2), dict()),
+    ("speed_report_loss", {}, dict()),
+    ("stale_plan_table", {}, dict()),
+    ("scheduler_kill", {}, dict(replan="decentral")),
+]
+for arrival in ("barrier", "first"):
+    for fuse in (1, 4):
+        for kind, target, kw in KINDS:
+            clean = run(arrival, fuse, **kw)
+            plan = ChaosPlan([FaultSpec(kind, 3, **target)])
+            fault = run(arrival, fuse, faults=plan, **kw)
+            assert np.array_equal(fault.result.eigvec,
+                                  clean.result.eigvec), (kind, arrival, fuse)
+            assert fault.executor_cache_size == 1
+        # A seeded multi-fault schedule (no scheduler_kill: central mode).
+        gen = ChaosPlan.generate(8, 4, n_faults=3, seed=fuse,
+                                 kinds=("worker_crash", "result_drop",
+                                        "speed_report_loss",
+                                        "stale_plan_table"))
+        clean = run(arrival, fuse)
+        fault = run(arrival, fuse, faults=gen)
+        assert np.array_equal(fault.result.eigvec, clean.result.eigvec), \\
+            (arrival, fuse, gen)
+        assert fault.executor_cache_size == 1
+print("GRID_OK")
+""", n_devices=4)
+    assert "GRID_OK" in out
+
+
+def test_uncovered_crash_demotes_replans_and_matches_clean_bits():
+    """S=0: a crash cannot be masked. The dispatch aborts BEFORE mutating
+    the carry, the dead worker is demoted like a preemption, a replan
+    fires, the step re-executes — and the bits still equal the clean
+    run's (output rows are plan-invariant)."""
+    out = run_with_devices(_PRELUDE + """
+for arrival, fuse in [("barrier", 1), ("first", 4)]:
+    clean = run(arrival, fuse, stragglers=0)
+    plan = ChaosPlan([FaultSpec("worker_crash", 3, worker=2)])
+    fault = run(arrival, fuse, stragglers=0, faults=plan)
+    assert np.array_equal(fault.result.eigvec, clean.result.eigvec), \\
+        (arrival, fuse)
+    assert fault.result.residuals == clean.result.residuals
+    assert fault.recoveries == 1 and fault.executor_cache_size == 1
+    recs = fault.fault_records
+    assert [r.action for r in recs] == ["demoted"], recs
+    assert recs[0].recover_s > 0.0        # stamped by the recovery loop
+    # The demoted worker left the fleet for the rest of the run.
+    assert 2 not in fault.reports[-1].available
+print("UNCOVERED_OK")
+""", n_devices=4)
+    assert "UNCOVERED_OK" in out
+
+
+def test_scheduler_kill_terminal_in_central_survivable_in_decentral():
+    out = run_with_devices(_PRELUDE + """
+from repro.core.decentral import SchedulerKilledError
+
+plan = ChaosPlan([FaultSpec("scheduler_kill", 2)])
+try:
+    run("barrier", 1, faults=plan, replan="central")
+    raise AssertionError("central mode survived a scheduler kill")
+except SchedulerKilledError:
+    pass
+
+clean = run("barrier", 1, replan="decentral")
+fault = run("barrier", 1, faults=plan, replan="decentral")
+assert np.array_equal(fault.result.eigvec, clean.result.eigvec)
+assert [r.action for r in fault.fault_records] == ["killed"]
+
+# Legacy API: kill_scheduler_at folds into the injector (same record).
+legacy = engine(replan="decentral").run(X, n_steps=8, kill_scheduler_at=2)
+assert np.array_equal(legacy.result.eigvec, clean.result.eigvec)
+assert [r.action for r in legacy.fault_records] == ["killed"]
+print("KILL_OK")
+""", n_devices=4)
+    assert "KILL_OK" in out
+
+
+def test_dispatch_timeout_turns_silent_worker_into_straggler():
+    """A worker whose modeled completion exceeds ``dispatch_timeout`` is
+    censored like a result drop: masked when S covers it (bitwise equal
+    to the run that never timed out — plan invariance again), with the
+    timeout as the record's modeled detection latency."""
+    out = run_with_devices("""
+import numpy as np
+from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+X = make_exact_matrix(4 * 96, 0)
+# The planner believes all four run at speed 1000; worker 0 actually
+# crawls at 10 — its modeled duration is ~100x the others', so a timeout
+# between the two separates it deterministically.
+EST = [1000., 1000., 1000., 1000.]
+REAL = [10., 1000., 1000., 1000.]
+
+def engine(timeout=None):
+    return ElasticEngine(
+        MatVecPowerIteration(seed=0),
+        Policy(placement="cyclic", replication=3, stragglers=1),
+        EngineConfig(block_rows=16, verify="exact",
+                     initial_speeds=tuple(EST), dispatch_timeout=timeout),
+        backend="device", n_machines=4,
+        clock=SyntheticSpeedClock(REAL, jitter_sigma=0.0, seed=0))
+
+ref = engine(timeout=None).run(X, n_steps=4)
+timed = engine(timeout=1.0).run(X, n_steps=4)
+assert np.array_equal(timed.result.eigvec, ref.result.eigvec)
+assert timed.executor_cache_size == 1
+recs = timed.fault_records
+assert recs and all(r.action == "masked" for r in recs), recs
+assert all(r.spec.worker == 0 for r in recs)
+assert all(r.detect_s == 1.0 for r in recs)
+print("TIMEOUT_OK")
+""", n_devices=4)
+    assert "TIMEOUT_OK" in out
+
+
+def test_plan_cache_survives_midcompile_raise():
+    """Satellite regression: a raise mid plan-compile (the block
+    expansion) must leave the cache without the failed key — never a
+    half-built entry — and the SAME step must succeed once the fault
+    clears, bitwise-equal to a never-faulted engine."""
+    out = run_with_devices(_PRELUDE + """
+import repro.runtime.executor as executor
+
+orig = executor.block_plan
+state = {"fail": 0}
+def flaky(*a, **kw):
+    if state["fail"] > 0:
+        state["fail"] -= 1
+        raise RuntimeError("injected mid-compile failure")
+    return orig(*a, **kw)
+executor.block_plan = flaky
+
+eng = engine()
+runner = eng.prepare(X)
+w = np.linalg.qr(np.random.default_rng(0).standard_normal((X.shape[1], 1)))[0][:, 0]
+
+# On-demand path: the compile raises, the cache stays clean, retry works.
+state["fail"] = 1
+try:
+    eng.submit(w)
+    raise AssertionError("injected failure did not propagate")
+except RuntimeError as e:
+    assert "injected" in str(e)
+assert runner.membership not in runner._plan_cache
+assert runner.plans_compiled == 0
+y_retry, _ = eng.submit(w)              # same step, fault cleared
+
+clean_eng = engine()
+clean_eng.prepare(X)
+y_clean, _ = clean_eng.submit(w)
+assert np.array_equal(np.asarray(y_retry), np.asarray(y_clean))
+
+# Speculative path: a neighbor's compile failure must not kill the live
+# step (it is simply not cached).
+state["fail"] = 1
+ev_runner = runner
+before = len(ev_runner._plan_cache)
+stored = ev_runner._precompile_neighbors(ev_runner.membership)
+assert len(ev_runner._plan_cache) >= before   # no corruption either way
+print("CACHE_OK", stored)
+""", n_devices=4)
+    assert "CACHE_OK" in out
+
+
+def test_checkpoint_on_fault_and_periodic_cadence(tmp_path):
+    """checkpoint_every writes at window-aligned boundaries;
+    checkpoint_on_fault snapshots the pre-recovery state; resuming from
+    the newest snapshot finishes bitwise-equal to the uninterrupted
+    run."""
+    out = run_with_devices(_PRELUDE + """
+import os
+from repro.runtime.checkpoint import latest_checkpoint
+
+CKPT = %r
+clean = run("barrier", 1, n_steps=8)
+
+plan = ChaosPlan([FaultSpec("worker_crash", 4, worker=2)])
+res = run("barrier", 1, n_steps=8, faults=plan, stragglers=0,
+          checkpoint_dir=CKPT, checkpoint_every=3, checkpoint_on_fault=True)
+assert np.array_equal(res.result.eigvec, clean.result.eigvec)
+steps = sorted(int(os.path.basename(p).split("_")[-1])
+               for p in res.checkpoints)
+assert steps == [3, 4, 6]                 # periodic, on-fault, periodic
+assert latest_checkpoint(CKPT) == res.checkpoints[-1]
+
+# Kill/resume drill from the newest snapshot: bitwise tail. The clean
+# run is the reference — the faulted run's surviving membership differs,
+# but the bits are plan-invariant.
+eng2 = engine()
+step, w = eng2.resume(CKPT, data=X)
+assert step == 6
+res2 = eng2.run(n_steps=8 - step, operand=w)
+assert np.array_equal(res2.result.eigvec, clean.result.eigvec)
+assert res2.result.residuals == clean.result.residuals[step:]
+print("CKPT_FAULT_OK")
+""" % str(tmp_path / "ckpt"), n_devices=4)
+    assert "CKPT_FAULT_OK" in out
+
+
+# ---------------------------------------------------------------------- #
+# Serving-layer degradation (subprocess)
+# ---------------------------------------------------------------------- #
+_SERVE_PRELUDE = """
+import numpy as np
+from repro.api import EngineConfig, Policy
+from repro.faults import ChaosPlan, FaultInjector, FaultSpec
+from repro.runtime.elastic_runner import SyntheticSpeedClock
+from repro.serve import ElasticServer, ServeConfig, SyntheticClock
+
+BASE = [1000., 1400., 1900., 2600.]
+rng = np.random.default_rng(0)
+X = rng.standard_normal((4 * 24, 32)).astype(np.float32)
+
+def server(serve_cfg, inj=None, stragglers=1):
+    return ElasticServer(
+        X,
+        policy=Policy(placement="cyclic", replication=2,
+                      stragglers=stragglers),
+        engine_cfg=EngineConfig(block_rows=8, initial_speeds=tuple(BASE)),
+        serve_cfg=serve_cfg,
+        clock=SyntheticClock(),
+        engine_clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0),
+        n_machines=4,
+        fault_injector=inj)
+"""
+
+
+def test_serve_fault_requeue_budget_and_backoff():
+    out = run_with_devices(_SERVE_PRELUDE + """
+# 1) Covered fault: masked inside the dispatch, no server-level fault.
+inj = FaultInjector(ChaosPlan([FaultSpec("result_drop", 0, worker=2)]))
+srv = server(ServeConfig(batch_cols=4), inj)
+for _ in range(3):
+    srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+resp = srv.drain()
+assert [r.status for r in resp] == ["ok"] * 3
+assert inj.fired("masked") == 1
+assert srv.metrics_snapshot()["faults"]["count"] == 0
+
+# 2) Uncovered crash: idempotent front-requeue, retry bitwise-equal to a
+#    server that never saw the fault.
+inj = FaultInjector(ChaosPlan([FaultSpec("worker_crash", 0, worker=2)]))
+srv = server(ServeConfig(batch_cols=4), inj, stragglers=0)
+ref = server(ServeConfig(batch_cols=4), None, stragglers=0)
+W = rng.standard_normal((32, 2)).astype(np.float32)
+srv.submit("matmat", W); ref.submit("matmat", W)
+r_f, r_c = srv.drain(), ref.drain()
+assert [r.status for r in r_f] == ["ok"]
+assert np.array_equal(np.asarray(r_f[0].result), np.asarray(r_c[0].result))
+snap = srv.metrics_snapshot()
+assert snap["faults"] == {"count": 1, "requeued": 1, "failed": 0,
+                          "backoff_polls": 0, "shed_events": 0,
+                          "restored_events": 0}
+assert snap["lanes"]["linear"]["jit_cache_size"] == 1
+assert 2 not in srv.available             # the crash demoted the worker
+
+# 3) Retry budget: the same step keeps crashing -> terminal "failed".
+inj = FaultInjector(ChaosPlan([FaultSpec("worker_crash", 0, worker=0)]))
+srv = server(ServeConfig(batch_cols=4, max_retries=1), inj, stragglers=0)
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+assert srv.poll() == [] and srv.queue_depth == 1     # abort 1: requeued
+inj.add(FaultSpec("worker_crash", 0, worker=1), absolute=True)
+resp = srv.poll()                                    # abort 2: budget gone
+assert [r.status for r in resp] == ["failed"]
+assert resp[0].meta["fault"] == "worker_crash"
+assert resp[0].meta["retries"] == 2
+assert srv.metrics_snapshot()["faults"]["failed"] == 1
+assert srv.queue_depth == 0
+
+# 4) Exponential backoff gates the retry until the clock passes it.
+inj = FaultInjector(ChaosPlan([FaultSpec("worker_crash", 0, worker=2)]))
+srv = server(ServeConfig(batch_cols=4, retry_backoff=5.0), inj,
+             stragglers=0)
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+assert srv.poll() == []                   # abort: not_before = now + 5
+assert srv._queue[0].not_before == srv.clock.now() + 5.0
+assert srv.poll() == []                   # gated
+assert srv.metrics_snapshot()["faults"]["backoff_polls"] == 1
+srv.clock.advance(5.0)
+assert [r.status for r in srv.drain()] == ["ok"]
+print("SERVE_FAULT_OK")
+""", n_devices=4)
+    assert "SERVE_FAULT_OK" in out
+
+
+def test_serve_degraded_shed_vs_stall():
+    out = run_with_devices(_SERVE_PRELUDE + """
+# stall (default): an infeasible fleet parks the queue until re-arrival.
+srv = server(ServeConfig(batch_cols=4, degraded="stall"))
+srv.feed_event(preempted=[2])             # thinnest tile: 1 live holder < 1+S
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+assert srv.drain() == []
+snap = srv.metrics_snapshot()
+assert snap["queue"]["stalled_polls"] >= 1
+assert snap["faults"]["shed_events"] == 0
+srv.feed_event(arrived=[2])
+assert [r.status for r in srv.drain()] == ["ok"]
+
+# shed: drop S to what the survivors cover, keep serving, restore later.
+srv = server(ServeConfig(batch_cols=4, degraded="shed"))
+srv.feed_event(preempted=[2])
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+out = srv.drain()
+assert [r.status for r in out] == ["ok"]
+assert srv._lanes["linear"].runner.planning_master.stragglers == 0
+snap = srv.metrics_snapshot()
+assert snap["faults"]["shed_events"] == 1
+assert snap["queue"]["stalled_polls"] == 0
+srv.feed_event(arrived=[2])
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+assert [r.status for r in srv.drain()] == ["ok"]
+assert srv._lanes["linear"].runner.planning_master.stragglers == 1
+assert srv.metrics_snapshot()["faults"]["restored_events"] == 1
+
+# shedding cannot resurrect a LOST tile: both holders gone -> stall even
+# in shed mode.
+srv = server(ServeConfig(batch_cols=4, degraded="shed"))
+srv.feed_event(preempted=[2, 3])          # tile (2,3) has zero holders
+srv.submit("matvec", rng.standard_normal(32).astype(np.float32))
+assert srv.drain() == []
+assert srv.metrics_snapshot()["queue"]["stalled_polls"] >= 1
+print("SERVE_DEGRADED_OK")
+""", n_devices=4)
+    assert "SERVE_DEGRADED_OK" in out

@@ -465,3 +465,48 @@ print("EDGE_OK")
     for marker in ("IDLE_OK", "REJECT_OK", "EXPIRE_OK", "MISS_OK",
                    "SURVIVE_OK", "ASYNC_OK", "EDGE_OK"):
         assert marker in out
+
+
+def test_async_close_fails_all_pending_waiters():
+    """Shutdown-hygiene regression: close() must resolve EVERY pending
+    waiter with a terminal "shutdown" response immediately — not leave
+    them awaiting a run-loop iteration that never comes — and a request
+    made after close resolves the same way without touching the queue."""
+    out = run_with_devices("""
+import asyncio
+import numpy as np
+from repro.api import EngineConfig, Policy
+from repro.serve import (AsyncElasticServer, ElasticServer, ServeConfig,
+                         SyntheticClock)
+
+rng = np.random.default_rng(0)
+X = rng.standard_normal((4 * 24, 32)).astype(np.float32)
+srv = ElasticServer(
+    X, policy=Policy(placement="cyclic", replication=2, stragglers=1),
+    engine_cfg=EngineConfig(block_rows=8),
+    serve_cfg=ServeConfig(batch_cols=4),
+    clock=SyntheticClock(), n_machines=4)
+srv.feed_event(preempted=[2])     # unserveable: requests pend forever
+
+async def main():
+    asrv = AsyncElasticServer(srv, idle_sleep=0.0)
+    loop_task = asyncio.ensure_future(asrv.run())
+    reqs = [asyncio.ensure_future(
+        asrv.request("matvec", rng.standard_normal(32).astype(np.float32)))
+        for _ in range(3)]
+    await asyncio.sleep(0.05)
+    assert not any(r.done() for r in reqs)    # genuinely pending
+    asrv.close()
+    resps = await asyncio.wait_for(asyncio.gather(*reqs), timeout=2)
+    assert [r.status for r in resps] == ["shutdown"] * 3
+    assert {r.kind for r in resps} == {"matvec"}
+    await asyncio.wait_for(loop_task, timeout=2)  # run() exits cleanly
+    assert asrv._waiters == {}
+    post = await asrv.request("matvec", np.zeros(32, np.float32))
+    assert post.status == "shutdown"
+    assert srv.queue_depth == 3    # nothing new was admitted after close
+
+asyncio.run(main())
+print("SHUTDOWN_OK")
+""", n_devices=4)
+    assert "SHUTDOWN_OK" in out
