@@ -48,14 +48,14 @@ DIM = N_WORKERS * 96
 
 
 def _engine(stragglers=1, replan="central", dispatch_timeout=None,
-            speeds=BASE_SPEEDS):
+            speeds=BASE_SPEEDS, verify_results="off"):
     from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
     from repro.runtime.elastic_runner import SyntheticSpeedClock
 
     return ElasticEngine(
         MatVecPowerIteration(seed=0),
         Policy(placement="cyclic", replication=3, stragglers=stragglers,
-               replan=replan),
+               replan=replan, verify_results=verify_results),
         EngineConfig(block_rows=16, verify="exact",
                      initial_speeds=BASE_SPEEDS,
                      dispatch_timeout=dispatch_timeout),
@@ -64,22 +64,25 @@ def _engine(stragglers=1, replan="central", dispatch_timeout=None,
 
 
 def _engine_cell(name, kind, step=3, worker=2, stragglers=1,
-                 replan="central", n_steps=8, csv=True):
+                 replan="central", n_steps=8, csv=True,
+                 verify_results="off"):
     """One fault kind through a clean-vs-faulted engine pair."""
     from repro.faults import ChaosPlan, FaultSpec
     from repro.runtime.elastic_runner import make_exact_matrix
 
     x = make_exact_matrix(DIM, 0)
     t0 = time.perf_counter()
-    clean = _engine(stragglers=stragglers, replan=replan).run(
-        x, n_steps=n_steps)
+    clean = _engine(stragglers=stragglers, replan=replan,
+                    verify_results=verify_results).run(x, n_steps=n_steps)
     clean_s = time.perf_counter() - t0
 
-    target = {"worker": worker} if kind in ("worker_crash", "result_drop") \
-        else {}
+    target = {"worker": worker} if kind in (
+        "worker_crash", "result_drop",
+        "tile_corruption", "result_corruption") else {}
     plan = ChaosPlan([FaultSpec(kind, step, **target)])
     t1 = time.perf_counter()
-    fault = _engine(stragglers=stragglers, replan=replan).run(
+    fault = _engine(stragglers=stragglers, replan=replan,
+                    verify_results=verify_results).run(
         x, n_steps=n_steps, faults=plan)
     fault_s = time.perf_counter() - t1
 
@@ -99,6 +102,7 @@ def _engine_cell(name, kind, step=3, worker=2, stragglers=1,
         "overhead_s": fault_s - clean_s,
         "bitwise_equal": True,
         "jit_cache_size": fault.executor_cache_size,
+        "integrity": fault.integrity,
     }
     if csv:
         print(f"fault_{name},{1e6 * fault_s / n_steps:.1f},"
@@ -152,6 +156,45 @@ def _timeout_cell(name="timeout_mask", n_steps=4, csv=True):
         print(f"fault_{name},{1e6 * (t2 - t1) / n_steps:.1f},"
               f"{entry['masked']} slow-worker steps censored at "
               f"timeout {entry['detect_s']:.1f}s; bitwise ok")
+    return entry
+
+
+def _verify_overhead_cell(n_steps=8, csv=True):
+    """Freivalds verification cost: the same clean run with the checker
+    off vs on every step. The audit is ``O(rows + cols)`` per column
+    against the step's ``O(rows · cols)`` matvec, so the fraction should
+    stay well under the 10% step-time budget (reported, not asserted —
+    wall noise on shared CI boxes is larger than the effect)."""
+    from repro.runtime.elastic_runner import make_exact_matrix
+
+    x = make_exact_matrix(DIM, 0)
+    # Warm both paths once so neither pays first-compile inside the timer.
+    _engine(verify_results="off").run(x, n_steps=2)
+    _engine(verify_results="always").run(x, n_steps=2)
+    t0 = time.perf_counter()
+    off = _engine(verify_results="off").run(x, n_steps=n_steps)
+    t1 = time.perf_counter()
+    on = _engine(verify_results="always").run(x, n_steps=n_steps)
+    t2 = time.perf_counter()
+    assert np.array_equal(on.result.eigvec, off.result.eigvec)
+    assert on.integrity["sketch_failures"] == 0, on.integrity
+    off_s, on_s = t1 - t0, t2 - t1
+    frac = (on_s - off_s) / off_s if off_s > 0 else 0.0
+    entry = {
+        "kind": "verify_overhead",
+        "n_steps": n_steps,
+        "off_wall_s": off_s,
+        "on_wall_s": on_s,
+        "overhead_fraction": frac,
+        "checks": on.integrity["checks"],
+        "tile_audits": on.integrity["tile_audits"],
+        "budget_fraction": 0.10,
+    }
+    if csv:
+        print(f"fault_verify_overhead,{1e6 * on_s / n_steps:.1f},"
+              f"{on.integrity['checks']} Freivalds checks + "
+              f"{on.integrity['tile_audits']} tile audits cost "
+              f"{100 * frac:+.1f}% vs unchecked (budget 10%); bitwise ok")
     return entry
 
 
@@ -251,6 +294,22 @@ def run(n_steps: int = 8, seed: int = 0, out: str = "BENCH_faults.json",
             "scheduler_kill", "scheduler_kill", stragglers=1,
             replan="decentral", n_steps=n_steps, csv=csv),
         "timeout_mask": _timeout_cell(csv=csv),
+        # Silent-corruption defense: wrong bits on time, detected by the
+        # Freivalds sketch / tile fingerprints, recovered bitwise. Worker
+        # 3 wins output rows under this plan — a corrupt backup worker
+        # would be absorbed unobserved.
+        "tile_corruption": _engine_cell(
+            "tile_corruption", "tile_corruption", worker=3, stragglers=1,
+            n_steps=n_steps, csv=csv, verify_results="always"),
+        "result_corruption": _engine_cell(
+            "result_corruption", "result_corruption", worker=3,
+            stragglers=1, n_steps=n_steps, csv=csv,
+            verify_results="always"),
+        "result_corruption_uncovered": _engine_cell(
+            "result_corruption_uncovered", "result_corruption", worker=3,
+            stragglers=0, n_steps=n_steps, csv=csv,
+            verify_results="always"),
+        "verify_overhead": _verify_overhead_cell(n_steps=n_steps, csv=csv),
     }
     goodput = [_serve_cell(rate, requests=3 * n_steps, seed=seed, csv=csv)
                for rate in (0.0, 0.125, 0.25)]
@@ -279,6 +338,19 @@ def run_smoke(seed: int = 0) -> None:
     assert cell["recoveries"] == 1, cell
     assert cell["actions"] == ["demoted"], cell
     assert cell["recover_s"] > 0.0, cell
+    # Corruption cells: silent wrong bits must be detected and recovered
+    # bitwise (asserted inside _engine_cell) with the right actions.
+    tile = _engine_cell("smoke_tile_corruption", "tile_corruption",
+                        worker=3, stragglers=1, n_steps=4, csv=False,
+                        verify_results="always")
+    assert tile["actions"] == ["restaged"], tile
+    assert tile["integrity"]["restaged"] == 1, tile
+    res = _engine_cell("smoke_result_corruption", "result_corruption",
+                       worker=3, stragglers=1, n_steps=4, csv=False,
+                       verify_results="always")
+    assert res["actions"] == ["quarantined"], res
+    assert res["integrity"]["quarantined"] == 1, res
+    assert res["integrity"]["sketch_failures"] == 1, res
     serve = _serve_cell(0.25, requests=8, seed=seed, csv=False)
     assert serve["faults"]["count"] >= 1, serve
     assert serve["faults"]["requeued"] >= 1, serve
@@ -286,7 +358,8 @@ def run_smoke(seed: int = 0) -> None:
     assert serve["jit_cache_size"] == 1, serve
     print(f"fault_smoke,0,uncovered crash recovered bitwise in "
           f"{1e3 * cell['recover_s']:.2f}ms on jit cache "
-          f"{cell['jit_cache_size']}; served {serve['completed']}/8 "
+          f"{cell['jit_cache_size']}; corrupt tile restaged + corrupt "
+          f"result quarantined bitwise; served {serve['completed']}/8 "
           f"through {serve['faults']['count']} window aborts")
 
 

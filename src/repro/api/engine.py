@@ -79,6 +79,12 @@ class EngineConfig:
         (every k engine steps, window-boundary-aligned when fused) and
         on-fault snapshots of the full resumable state via
         :meth:`ElasticEngine.save_state`; ``resume()`` continues bitwise.
+      verify_results: silent-corruption defense override — None inherits
+        ``policy.verify_results``; ``"off"`` / ``"sample"`` / ``"always"``
+        force the runner's tile-audit + Freivalds cadence (see
+        :class:`~repro.api.policy.Policy` and
+        :class:`~repro.faults.integrity.IntegrityChecker`). The simulate
+        backend models announced churn only and ignores it.
 
     Both backends:
       arrival: the master's consume rule — ``"barrier"`` (legacy, block on
@@ -135,6 +141,7 @@ class EngineConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: Optional[int] = None
     checkpoint_on_fault: bool = False
+    verify_results: Optional[str] = None
     # simulate
     n_draws: int = 1000
     speed_mean: float = 1.0
@@ -162,6 +169,8 @@ class EngineConfig:
         _validate_choice("verify", self.verify, (None, "exact", "allclose"))
         _validate_choice("segmented", self.segmented,
                          (None, "auto", "pallas", "interpret", "ref"))
+        _validate_choice("verify_results", self.verify_results,
+                         (None, "off", "sample", "always"))
         if self.dispatch_timeout is not None and self.dispatch_timeout <= 0:
             raise ValueError(
                 f"dispatch_timeout must be > 0 (modeled seconds), got "
@@ -217,6 +226,11 @@ class EngineResult:
     fault_records: List = field(default_factory=list)
     recoveries: int = 0
     checkpoints: List = field(default_factory=list)
+    # Silent-corruption telemetry (device runs with verify_results on):
+    # this run's Freivalds checks / sketch failures / tile audits and the
+    # recovery actions they triggered (restaged tiles, quarantined
+    # partials, host-repaired rows, graylist events). Empty when off.
+    integrity: Dict[str, int] = field(default_factory=dict)
 
 
 class ElasticEngine:
@@ -600,6 +614,9 @@ class ElasticEngine:
             arrival=self.cfg.arrival,
             replan=self.cfg.replan,
             dispatch_timeout=self.cfg.dispatch_timeout,
+            verify_results=(
+                self.cfg.verify_results if self.cfg.verify_results is not None
+                else self.policy.verify_results),
         )
         runner = ElasticRunner(
             x, self.placement, rcfg,
@@ -643,6 +660,7 @@ class ElasticEngine:
         # THIS run's share, so repeated run() calls don't double-count.
         base = (runner.total_waste, runner.churn_events,
                 runner.plans_compiled, runner.cache_hits)
+        integrity_base = runner.integrity_snapshot()
         reports: List = []
         last = None
         fused = runner.cfg.fuse_steps > 1 and runner.fuse_supported
@@ -891,6 +909,9 @@ class ElasticEngine:
                 [] if inj is None else list(inj.log[log_base:])),
             recoveries=recoveries,
             checkpoints=checkpoints,
+            integrity={
+                k: v - integrity_base.get(k, 0)
+                for k, v in runner.integrity_snapshot().items()},
         )
 
     # ------------------------------------------------------------------ #

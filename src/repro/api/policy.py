@@ -63,6 +63,14 @@ class Policy:
         is a plan-table lookup keyed by membership bitmask, bitwise-equal
         to the central solver, and the run survives a mid-run scheduler
         kill).
+      verify_results: silent-corruption defense — ``"off"`` (trust worker
+        bits), ``"sample"`` (audit staged tiles and Freivalds-check linear
+        partials every :data:`~repro.faults.integrity.SAMPLE_PERIOD` steps)
+        or ``"always"`` (every step). A failed check quarantines the
+        producing worker's partial (masked / re-served by a surviving
+        holder), censors its timing from the EWMA, and graylists repeat
+        offenders; a corrupted staged tile is re-staged from a surviving
+        replica holder. See :class:`~repro.faults.integrity.IntegrityChecker`.
     """
 
     placement: str = "cyclic"
@@ -79,6 +87,7 @@ class Policy:
     gamma: float = 0.5
     homogeneous: bool = False
     replan: str = "central"
+    verify_results: str = "off"
 
     def __post_init__(self):
         allowed = ("repetition", "cyclic", "man", "custom")
@@ -98,6 +107,10 @@ class Policy:
             raise ValueError(
                 f"replan must be 'central' or 'decentral', got "
                 f"{self.replan!r}")
+        if self.verify_results not in ("off", "sample", "always"):
+            raise ValueError(
+                f"verify_results must be one of ('off', 'sample', "
+                f"'always'), got {self.verify_results!r}")
 
     # ------------------------------------------------------------------ #
     @property

@@ -60,10 +60,16 @@ class Workload:
       out_cols: static per-row output width of ``tile_compute`` when it
         differs from the operand's column count (None = follows operand —
         the matvec/matmat case).
+      linear: True when the per-step result is a linear map of the
+        operand (``y = X @ w``), which makes it eligible for Freivalds
+        result verification (``verify_results``; see
+        :class:`repro.faults.integrity.IntegrityChecker`). Tile
+        fingerprint auditing applies regardless.
     """
 
     name: str = "workload"
     out_cols: Optional[int] = None
+    linear: bool = False
 
     # ------------------------------------------------------------------ #
     # The protocol
@@ -233,6 +239,7 @@ class MatVec(Workload):
     TPU, the fused jnp dot on CPU (``repro.kernels.ops.executor_matmul``)."""
 
     name = "matvec"
+    linear = True
 
     def tile_compute(self, staged_block, operand):
         return self.executor_fn(None)(staged_block, operand)
@@ -372,6 +379,7 @@ class MatMat(Workload):
     """
 
     name = "matmat"
+    linear = True
 
     def __init__(self, w: Optional[np.ndarray] = None):
         self.w = None if w is None else np.asarray(w, dtype=np.float32)

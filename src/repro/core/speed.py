@@ -59,10 +59,21 @@ class SpeedEstimator:
             self._s[n] = self.gamma * nu + (1.0 - self.gamma) * self._s[n]
         return self.speeds
 
-    def measure(self, loads: Dict[int, float], durations: Dict[int, float]) -> Dict[int, float]:
-        """nu[n] = mu[n] / duration[n] for workers that finished."""
+    def measure(self, loads: Dict[int, float], durations: Dict[int, float],
+                exclude: Optional[Sequence[int]] = None) -> Dict[int, float]:
+        """nu[n] = mu[n] / duration[n] for workers that finished.
+
+        ``exclude`` censors workers whose measurements are quarantined —
+        a worker flagged by the integrity layer returned corrupt bits,
+        so its timing is equally untrustworthy and must not reach the
+        EWMA (the resulting update is bit-identical to one that never
+        saw the worker; see
+        :func:`repro.faults.integrity.censor_measurements`)."""
+        skip = set() if exclude is None else {int(n) for n in exclude}
         out = {}
         for n, mu in loads.items():
+            if n in skip:
+                continue
             d = durations.get(n)
             if d is not None and d > 0 and mu > 0:
                 out[n] = mu / d

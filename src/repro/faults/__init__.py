@@ -5,8 +5,10 @@ membership change arrives as a clean
 :class:`~repro.core.elastic.ElasticEvent` before the step that must
 honor it. Real fleets also fail silently — a worker crashes mid-step, a
 partial result never arrives, a speed report is lost in transit, a plan
-table replica goes stale, the central scheduler dies. This package
-schedules exactly those faults deterministically
+table replica goes stale, the central scheduler dies — or, worst of all,
+a worker answers on time with silently *wrong* bits (a corrupted staged
+tile or a perturbed partial), which no absence-based detector can see.
+This package schedules exactly those faults deterministically
 (:class:`~repro.faults.chaos.ChaosPlan`), injects them at the runner /
 engine / server seams through a :class:`~repro.faults.chaos.FaultInjector`
 hook, and defines the abort signal
@@ -22,21 +24,39 @@ cache still at one entry (recovery is data, never a recompile).
 """
 
 from .chaos import (
+    CORRUPTION_KINDS,
     DISPATCH_KINDS,
     FAULT_KINDS,
+    GENERATE_KINDS,
     ChaosPlan,
     FaultAbort,
     FaultInjector,
     FaultRecord,
     FaultSpec,
 )
+from .integrity import (
+    SAMPLE_PERIOD,
+    IntegrityChecker,
+    WorkerHealth,
+    censor_measurements,
+    should_verify,
+    tile_checksum,
+)
 
 __all__ = [
     "ChaosPlan",
+    "CORRUPTION_KINDS",
     "DISPATCH_KINDS",
     "FAULT_KINDS",
+    "GENERATE_KINDS",
     "FaultAbort",
     "FaultInjector",
     "FaultRecord",
     "FaultSpec",
+    "IntegrityChecker",
+    "SAMPLE_PERIOD",
+    "WorkerHealth",
+    "censor_measurements",
+    "should_verify",
+    "tile_checksum",
 ]

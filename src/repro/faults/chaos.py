@@ -1,7 +1,7 @@
 """Deterministic chaos schedules and the fault-injection hook.
 
-Five fault kinds, covering every unannounced-failure mode the engine and
-serving layer recover from:
+Seven fault kinds, covering every unannounced-failure mode the engine
+and serving layer recover from:
 
 ``worker_crash``
     The machine dies mid-step: its partial never arrives AND it leaves
@@ -30,6 +30,26 @@ serving layer recover from:
     local rule; central mode raises
     :class:`~repro.core.decentral.SchedulerKilledError` at the next
     planning decision.
+``tile_corruption``
+    Silent bit-rot in one worker's staged replica tile BEFORE the step
+    dispatches. Unlike every kind above, nothing goes absent — the
+    worker computes on garbage and answers on time. Detected by the
+    staging-time tile fingerprints of
+    :class:`~repro.faults.integrity.IntegrityChecker` (when
+    ``verify_results`` is on) and repaired by re-staging the tile from
+    a surviving replica holder — the uncoded-redundancy recovery.
+``result_corruption``
+    One worker's returned partial is silently perturbed after compute.
+    Detected by the seeded Freivalds sketch check; the partial is
+    discarded (first-arrival: realized straggler; barrier: masked +
+    re-dispatched; fused: rows recomputed from a replica tile), the
+    step's timing is censored from the EWMA, and repeat offenders are
+    graylisted.
+
+The corruption kinds are deliberately NOT in :data:`GENERATE_KINDS`:
+without ``verify_results`` enabled they make results silently wrong —
+which is exactly the failure mode they exist to demonstrate — so a
+:meth:`ChaosPlan.generate` schedule only draws them when asked.
 
 Fault *steps* are the runner's executed-step indices (0-based): a spec
 with ``step=3`` fires when the runner is about to execute its 4th step.
@@ -47,8 +67,10 @@ import numpy as np
 
 __all__ = [
     "ChaosPlan",
+    "CORRUPTION_KINDS",
     "DISPATCH_KINDS",
     "FAULT_KINDS",
+    "GENERATE_KINDS",
     "FaultAbort",
     "FaultInjector",
     "FaultRecord",
@@ -61,6 +83,8 @@ FAULT_KINDS: Tuple[str, ...] = (
     "speed_report_loss",
     "stale_plan_table",
     "scheduler_kill",
+    "tile_corruption",
+    "result_corruption",
 )
 
 #: Kinds that target one worker's dispatch (``worker=`` required).
@@ -68,6 +92,22 @@ DISPATCH_KINDS: Tuple[str, ...] = ("worker_crash", "result_drop")
 
 #: Kinds that hit the planning path, consulted before plan adoption.
 PLANNING_KINDS: Tuple[str, ...] = ("scheduler_kill", "stale_plan_table")
+
+#: Silent-corruption kinds (``worker=`` required): nothing goes absent,
+#: the answer is just wrong. Only detectable with ``verify_results`` on.
+CORRUPTION_KINDS: Tuple[str, ...] = ("tile_corruption", "result_corruption")
+
+#: The default :meth:`ChaosPlan.generate` pool: the loss/telemetry kinds
+#: whose recovery needs no integrity verification. Corruption kinds are
+#: opt-in (pass ``kinds=``) — injecting them into a run that is not
+#: verifying produces silently wrong results by design.
+GENERATE_KINDS: Tuple[str, ...] = (
+    "worker_crash",
+    "result_drop",
+    "speed_report_loss",
+    "stale_plan_table",
+    "scheduler_kill",
+)
 
 
 @dataclass(frozen=True)
@@ -86,7 +126,7 @@ class FaultSpec:
         if int(self.step) < 0:
             raise ValueError(f"step must be >= 0, got {self.step}")
         object.__setattr__(self, "step", int(self.step))
-        if self.kind in DISPATCH_KINDS:
+        if self.kind in DISPATCH_KINDS or self.kind in CORRUPTION_KINDS:
             if self.worker is None:
                 raise ValueError(
                     f"{self.kind} targets one worker's dispatch; "
@@ -110,6 +150,15 @@ class ChaosPlan:
         for f in specs:
             if not isinstance(f, FaultSpec):
                 raise TypeError(f"ChaosPlan wants FaultSpecs, got {f!r}")
+        seen = set()
+        for f in specs:
+            key = (f.step, f.worker, f.kind)
+            if key in seen:
+                raise ValueError(
+                    f"duplicate fault spec (step={f.step}, "
+                    f"worker={f.worker}, kind={f.kind!r}): each "
+                    f"(step, worker, kind) may appear at most once")
+            seen.add(key)
         self.faults: Tuple[FaultSpec, ...] = tuple(sorted(
             specs, key=lambda f: (f.step, f.kind, -1 if f.worker is None
                                   else f.worker)))
@@ -136,12 +185,14 @@ class ChaosPlan:
         n_steps: int,
         n_machines: int,
         n_faults: int = 3,
-        kinds: Sequence[str] = FAULT_KINDS,
+        kinds: Sequence[str] = GENERATE_KINDS,
         seed: int = 0,
     ) -> "ChaosPlan":
         """Draw a deterministic schedule: ``n_faults`` faults at distinct
         steps of ``[0, n_steps)``, kinds cycled from ``kinds`` in drawn
-        order, dispatch kinds targeting a uniformly drawn worker."""
+        order, worker-addressed kinds targeting a uniformly drawn
+        worker. Defaults to :data:`GENERATE_KINDS`; pass corruption
+        kinds explicitly to draw them."""
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         if n_machines < 1:
@@ -157,10 +208,8 @@ class ChaosPlan:
         specs = []
         for i, step in enumerate(steps):
             kind = kinds[int(order[i % len(order)])]
-            worker = (
-                int(rng.integers(n_machines)) if kind in DISPATCH_KINDS
-                else None
-            )
+            addressed = kind in DISPATCH_KINDS or kind in CORRUPTION_KINDS
+            worker = int(rng.integers(n_machines)) if addressed else None
             specs.append(FaultSpec(kind=kind, step=int(step), worker=worker))
         return cls(specs)
 

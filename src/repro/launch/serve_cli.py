@@ -36,6 +36,23 @@ def build_server(args):
 
     x = make_exact_matrix(args.dim, args.seed)
 
+    fault_injector = None
+    verify_results = "off"
+    if args.corruption_rate > 0:
+        from repro.faults import ChaosPlan, FaultInjector
+
+        # One step index per potential window: a seeded schedule of
+        # silent result corruptions for the linear lane's runner, audited
+        # end-to-end by the server (verify_results="always") — detected
+        # windows requeue and retry clean, and the snapshot's integrity
+        # counters record the whole story deterministically.
+        n_faults = max(1, round(args.corruption_rate * args.requests))
+        plan = ChaosPlan.generate(
+            max(args.requests, 1), N_WORKERS, n_faults=n_faults,
+            kinds=("result_corruption",), seed=args.seed + 13)
+        fault_injector = FaultInjector(plan)
+        verify_results = "always"
+
     def _mapreduce():
         import jax.numpy as jnp
 
@@ -57,12 +74,14 @@ def build_server(args):
                      fuse_steps=args.fuse_steps, verify=args.verify,
                      initial_speeds=BASE_SPEEDS),
         ServeConfig(batch_cols=args.batch_cols, max_queue=args.max_queue,
-                    default_deadline=args.deadline),
+                    default_deadline=args.deadline,
+                    verify_results=verify_results),
         mapreduce=_mapreduce(),
         clock=SyntheticClock(),
         engine_clock=SyntheticSpeedClock(BASE_SPEEDS, jitter_sigma=0.0,
                                          seed=args.seed),
         n_machines=N_WORKERS,
+        fault_injector=fault_injector,
     )
     return server, x
 
@@ -120,8 +139,16 @@ def main(argv=None):
     ap.add_argument("--verify", choices=("exact", "allclose"), default=None)
     ap.add_argument("--mapreduce-every", type=int, default=0,
                     help="every Nth request is a mapreduce query (0 = none)")
+    ap.add_argument("--corruption-rate", type=float, default=0.0,
+                    help="fraction of the trace hit by seeded silent "
+                         "result corruption (>0 turns the server's "
+                         "Freivalds window audit on; detected windows "
+                         "requeue and retry clean)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if not 0.0 <= args.corruption_rate <= 1.0:
+        ap.error(f"--corruption-rate must be in [0, 1], "
+                 f"got {args.corruption_rate}")
 
     ensure_host_devices(N_WORKERS)
     server, _ = build_server(args)

@@ -12,6 +12,12 @@ Layout:
         manifest.json           (step, leaf index, shapes/dtypes, user meta)
         leaf_00000.npz ...      (one file per pytree leaf, keyed by flat path)
     <dir>/LATEST                (atomic pointer file)
+
+Integrity: every leaf file's bytes are CRC32-fingerprinted at save time
+(recorded in the manifest) and re-checked on restore — a truncated or
+bit-flipped shard raises :class:`CheckpointCorruptError` naming the file
+instead of silently resuming from wrong state. Pre-fingerprint
+checkpoints (no ``crc32`` keys) restore without the check.
 """
 
 from __future__ import annotations
@@ -20,10 +26,16 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file on disk fails its integrity check (truncated,
+    bit-flipped, or unparsable). The message names the offending file."""
 
 
 def _flatten(tree: Any) -> Dict[str, Any]:
@@ -57,8 +69,11 @@ def save_checkpoint(
                 arr = arr.astype(np.float32)
             fname = f"leaf_{i:05d}.npz"
             np.savez(os.path.join(tmp, fname), value=arr)
+            with open(os.path.join(tmp, fname), "rb") as lf:
+                crc = zlib.crc32(lf.read())
             index.append(
-                {"key": key, "file": fname, "shape": list(arr.shape), "dtype": dtype_str}
+                {"key": key, "file": fname, "shape": list(arr.shape),
+                 "dtype": dtype_str, "crc32": crc}
             )
         manifest = {
             "step": int(step),
@@ -103,9 +118,19 @@ def restore_checkpoint(
     elastic-resharding path: the saved mesh and the restoring mesh may differ.
 
     Returns (step, tree, extra).
+
+    Raises :class:`CheckpointCorruptError` when the manifest is
+    unparsable or a leaf file's bytes no longer match their save-time
+    CRC32 fingerprint — resuming from a silently damaged checkpoint
+    would poison every step after it, so the restore refuses instead.
     """
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint manifest {mpath} is corrupt: {e}") from e
     by_key = {e["key"]: e for e in manifest["leaves"]}
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -123,7 +148,22 @@ def restore_checkpoint(
         if key not in by_key:
             raise KeyError(f"checkpoint missing leaf {key}")
         entry = by_key[key]
-        arr = np.load(os.path.join(path, entry["file"]))["value"]
+        fpath = os.path.join(path, entry["file"])
+        if "crc32" in entry:
+            with open(fpath, "rb") as lf:
+                crc = zlib.crc32(lf.read())
+            if crc != int(entry["crc32"]):
+                raise CheckpointCorruptError(
+                    f"checkpoint leaf {fpath} (key {key}) fails its "
+                    f"integrity check: CRC32 {crc:#010x} != recorded "
+                    f"{int(entry['crc32']):#010x} — the file was "
+                    f"truncated or bit-flipped on disk")
+        try:
+            arr = np.load(fpath)["value"]
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"checkpoint leaf {fpath} (key {key}) is unreadable: "
+                f"{e}") from e
         want_shape = tuple(proto.shape) if hasattr(proto, "shape") else None
         if want_shape is not None and tuple(arr.shape) != want_shape:
             raise ValueError(

@@ -150,6 +150,20 @@ class RunnerConfig:
       :meth:`ElasticRunner.kill_scheduler` mid-run does not stop the job.
       (An explicit ``policy=`` with ``replan="decentral"`` opts in too;
       either flag wins.)
+    verify_results: silent-corruption defense (``"off"`` | ``"sample"``
+      | ``"always"``). On verified steps the runner (1) audits every
+      staged replica tile against its staging-time fingerprint and
+      re-stages a corrupt tile from a surviving replica holder, and (2)
+      Freivalds-checks the step output against seeded ±1 sketches of X
+      (linear workloads; O(rows+cols) per column vs O(rows·cols)
+      recompute — see :class:`repro.faults.integrity.IntegrityChecker`).
+      A corrupt partial is discarded (first-arrival: realized straggler;
+      barrier: masked + re-dispatched; fused: rows recomputed from a
+      replica tile), its timing is censored from the EWMA, and repeat
+      offenders are graylisted for a probation window. ``"sample"``
+      verifies every :data:`repro.faults.integrity.SAMPLE_PERIOD`-th
+      step. Unlike ``verify`` this needs no full float64 recompute, so
+      it is cheap enough to leave on in production.
     """
 
     block_rows: int = 16
@@ -166,6 +180,7 @@ class RunnerConfig:
     arrival: str = "barrier"
     replan: str = "central"
     dispatch_timeout: Optional[float] = None
+    verify_results: str = "off"
 
     def __post_init__(self):
         # String knobs fail HERE, at construction, naming the allowed set —
@@ -177,6 +192,8 @@ class RunnerConfig:
                          (None, "exact", "allclose"))
         _validate_choice("segmented", self.segmented,
                          (None, "auto", "pallas", "interpret", "ref"))
+        _validate_choice("verify_results", self.verify_results,
+                         ("off", "sample", "always"))
         if self.dispatch_timeout is not None and self.dispatch_timeout <= 0:
             raise ValueError(
                 f"dispatch_timeout must be > 0 (modeled seconds), got "
@@ -527,6 +544,45 @@ class ElasticRunner:
         # FaultAbort pre-dispatch with the demotion set on the exception.
         self.fault_injector = None
         self.pending_demotions: Set[int] = set()
+        # Silent-corruption defense (cfg.verify_results): staged-tile
+        # fingerprints + Freivalds sketch products, built from the SAME
+        # host bits the executor staged — a clean run can never disagree
+        # with its own checker. Sketches only apply to linear workloads
+        # (y = X @ w); tile auditing is workload-agnostic.
+        self._integrity = None
+        if cfg.verify_results != "off":
+            from repro.faults.integrity import IntegrityChecker
+
+            self._integrity = IntegrityChecker(
+                x,
+                staged=self._staged.staged,
+                slot_of=self._staged.slot_of,
+                holders=placement.holders,
+                block_rows=cfg.block_rows,
+                linear=getattr(workload, "linear", False),
+                exact=(cfg.verify == "exact"),
+            )
+        # Injected-but-undetected corruption specs by worker: consumed at
+        # the injection seam, recorded when (if) the defense catches them.
+        self._live_tile_specs: Dict[int, object] = {}
+        self._live_result_specs: Dict[int, object] = {}
+        self.integrity = {
+            "restaged": 0,
+            "quarantined": 0,
+            "repaired_rows": 0,
+            "graylist_events": 0,
+        }
+
+    def integrity_snapshot(self) -> Dict[str, int]:
+        """Integrity counters: runner-side recovery counts plus the
+        checker's check/failure/audit totals (zeros when off)."""
+        out = dict(self.integrity)
+        if self._integrity is not None:
+            out.update(self._integrity.counters())
+        else:
+            out.update({"checks": 0, "sketch_failures": 0,
+                        "tile_audits": 0})
+        return out
 
     def add_completion_callback(self, cb) -> None:
         """Register ``cb(reports: List[StepReport])`` to fire once per
@@ -1092,6 +1148,406 @@ class ElasticRunner:
         stack = np.stack(parts)
         return stack[pos[winner], np.arange(self.rows_total)]
 
+    # ------------------------------------------------------------------ #
+    # Silent-corruption defense (cfg.verify_results)
+    # ------------------------------------------------------------------ #
+    def _verifying(self, t: int) -> bool:
+        """Does ``verify_results`` check absolute step ``t``?"""
+        if self._integrity is None:
+            return False
+        from repro.faults.integrity import should_verify
+
+        return should_verify(self.cfg.verify_results, t)
+
+    def _consume_tile_corruption(self, t: int) -> None:
+        """Fire scheduled ``tile_corruption`` faults: flip bits in the
+        target's first stored replica tile (host + device copies). The
+        fault is silent — detection is the fingerprint audit's job."""
+        inj = self.fault_injector
+        if inj is None:
+            return
+        from repro.faults.integrity import corrupt_tile
+
+        for spec in inj.take(t, kinds=("tile_corruption",)):
+            n = int(spec.worker)
+            stored = np.flatnonzero(self._staged.slot_of[n] >= 0)
+            if n not in self._membership or stored.size == 0:
+                inj.record(spec, "noop",
+                           f"worker {n} stores no tiles")
+                continue
+            slot = int(self._staged.slot_of[n, int(stored[0])])
+            corrupt_tile(self._staged.staged[n, slot])
+            self._staged_dev = self._jnp.asarray(self._staged.staged)
+            self._live_tile_specs[n] = spec
+
+    def _audit_and_restage(self, t: int) -> None:
+        """Pre-dispatch tile audit: re-checksum every staged replica
+        against its staging-time fingerprint. A corrupt tile is repaired
+        IN PLACE from a surviving replica holder whose own copy still
+        matches — the uncoded-redundancy recovery: full capacity is
+        restored, the plan (and therefore the output bits) is untouched,
+        and nobody is demoted. Only when no clean replica survives does
+        the holder get demoted via :class:`FaultAbort`."""
+        chk = self._integrity
+        if chk is None or not chk.fingerprints:
+            return
+        mismatches = chk.audit_tiles(self._staged.staged)
+        if not mismatches:
+            return
+        from repro.faults.chaos import FaultAbort, FaultSpec
+
+        inj = self.fault_injector
+        restaged = False
+        for n, slot, g in mismatches:
+            spec = self._live_tile_specs.pop(n, None) or FaultSpec(
+                "tile_corruption", max(t, 0), worker=n)
+            donor = chk.find_donor(
+                self._staged.staged, g, n, self._membership)
+            if donor is None:
+                if inj is not None:
+                    inj.record(
+                        spec, "demoted",
+                        f"step {t}: tile {g} corrupt on worker {n} with "
+                        f"no clean surviving replica; demote")
+                raise FaultAbort(
+                    t, "tile_corruption", lost=(n,), demote=(n,),
+                    detail=f"tile {g} has no clean surviving replica")
+            chk.restage(self._staged.staged, n, slot, g, donor)
+            restaged = True
+            self.integrity["restaged"] += 1
+            if inj is not None:
+                inj.record(
+                    spec, "restaged",
+                    f"step {t}: tile {g} on worker {n} failed its "
+                    f"staging fingerprint; re-staged from replica holder "
+                    f"{donor} — capacity restored, plan untouched")
+        if restaged:
+            self._staged_dev = self._jnp.asarray(self._staged.staged)
+
+    def _graylist_forced(self, t: int, entry: _CacheEntry,
+                         already: Set[int]) -> Set[int]:
+        """Graylisted workers (repeat corruption offenders on probation)
+        to force into this step's realized straggler set. Probation is
+        best-effort: when the S budget cannot cover the distrusted
+        worker, its (sketch-verified) result is consumed anyway."""
+        chk = self._integrity
+        if chk is None:
+            return set()
+        gray = chk.health.graylisted(t) & set(self._membership)
+        gray -= set(already)
+        if not gray or not self._coverable(entry, set(already) | gray):
+            return set()
+        return gray
+
+    def _note_quarantine(self, t: int, workers: Set[int]) -> Set[int]:
+        """Strike each corrupt worker's health ledger; returns the subset
+        this strike newly graylisted."""
+        gray = set()
+        for n in sorted(workers):
+            if self._integrity.health.strike(n, t):
+                gray.add(n)
+                self.integrity["graylist_events"] += 1
+        return gray
+
+    def _first_winner_row(self, entry: _CacheEntry, bad: Set[int],
+                          n: int) -> Optional[int]:
+        """First global output row worker ``n`` delivers under the
+        current include weights (None when it wins no rows)."""
+        from .executor import refresh_include
+
+        include = refresh_include(
+            entry.block, entry.step_plan.plan, tuple(sorted(bad)))
+        win = (include[n] > 0) & (entry.block.blk_seg_t[n] >= 0)
+        bs = np.nonzero(win)[0]
+        if bs.size == 0:
+            return None
+        return int(entry.block.blk_goff[n, int(bs[0])])
+
+    def _chunk_winners(self, entry: _CacheEntry, bad: Set[int],
+                       chunks) -> Set[int]:
+        """The workers that delivered the given ``block_rows`` row chunks
+        under the current include weights — the localization step that
+        turns a failed sketch into a named culprit."""
+        from .executor import refresh_include
+
+        include = refresh_include(
+            entry.block, entry.step_plan.plan, tuple(sorted(bad)))
+        bp = entry.block
+        win = (include > 0) & (bp.blk_seg_t >= 0)
+        n_idx, b_idx = np.nonzero(win)
+        chunk_of = bp.blk_goff[n_idx, b_idx] // self.cfg.block_rows
+        want = {int(c) for c in chunks}
+        return {int(n) for n, c in zip(n_idx, chunk_of) if int(c) in want}
+
+    def _integrity_first(
+        self,
+        t: int,
+        entry: _CacheEntry,
+        parts: List[np.ndarray],
+        loaded: List[int],
+        w,
+        silent: Set[int],
+        durations: Dict[int, float],
+        injected,
+    ) -> Tuple[Set[int], Dict[int, float]]:
+        """First-arrival corruption seam: inject scheduled
+        ``result_corruption`` into the fetched partials, then Freivalds-
+        check each loaded worker's rows. A corrupt worker becomes a
+        realized straggler — its rows are served by a surviving holder
+        through the ordinary winner gather, its timing is censored from
+        the EWMA — or, past the S budget, it is demoted via FaultAbort
+        before the combine."""
+        from repro.faults.chaos import FaultAbort, FaultSpec
+        from repro.faults.integrity import corrupt_result
+
+        inj = self.fault_injector
+        bp = entry.block
+        if inj is not None:
+            for spec in inj.take(t, kinds=("result_corruption",)):
+                n = int(spec.worker)
+                if n not in loaded:
+                    inj.record(spec, "noop",
+                               f"worker {n} has no partial this step")
+                    continue
+                # np.asarray of a device buffer is read-only; corrupt a copy.
+                i = loaded.index(n)
+                p = np.array(parts[i])
+                corrupt_result(p, int(bp.blk_goff[n, 0]))
+                parts[i] = p
+                self._live_result_specs[n] = spec
+        chk = self._integrity
+        if chk is None or not chk.linear or not self._verifying(t):
+            return silent, durations
+        br = self.cfg.block_rows
+        corrupt: Set[int] = set()
+        for i, n in enumerate(loaded):
+            nb = int(bp.n_blocks[n])
+            chunks = (bp.blk_goff[n, :nb] // br).tolist()
+            if not chk.check_chunks(t, parts[i], w, chunks):
+                corrupt.add(n)
+        if not corrupt:
+            return silent, durations
+        newly_gray = self._note_quarantine(t, corrupt)
+        lost = tuple(sorted(corrupt))
+        if not self._coverable(
+                entry, silent | corrupt | set(injected or ())):
+            for n in lost:
+                spec = self._live_result_specs.pop(n, None) or FaultSpec(
+                    "result_corruption", max(t, 0), worker=n)
+                if inj is not None:
+                    inj.record(
+                        spec, "demoted",
+                        f"step {t}: corrupt partial from worker {n} "
+                        f"exceeds S={entry.stragglers}; abort, demote, "
+                        f"replan, re-execute")
+            raise FaultAbort(
+                t, "result_corruption", lost=lost, demote=lost,
+                detail=f"S={entry.stragglers} cannot cover corrupt "
+                       f"worker(s) {list(lost)}")
+        self.integrity["quarantined"] += len(corrupt)
+        for n in lost:
+            spec = self._live_result_specs.pop(n, None) or FaultSpec(
+                "result_corruption", max(t, 0), worker=n)
+            if inj is not None:
+                inj.record(
+                    spec, "quarantined",
+                    f"step {t}: worker {n}'s partial failed the "
+                    f"Freivalds sketch; realized straggler, rows served "
+                    f"by a surviving holder, timing censored"
+                    + (", graylisted" if n in newly_gray else ""))
+        return silent | corrupt, {
+            n: d for n, d in durations.items() if n not in corrupt}
+
+    def _integrity_barrier(
+        self,
+        t: int,
+        entry: _CacheEntry,
+        y: np.ndarray,
+        w,
+        bad: Tuple[int, ...],
+        durations: Dict[int, float],
+    ) -> Tuple[np.ndarray, Dict[int, float], Tuple[int, ...]]:
+        """Barrier corruption seam: inject scheduled
+        ``result_corruption`` into the fetched output, Freivalds-check
+        it, and on failure localize the corrupt row chunks to their
+        producing worker. Recovery mirrors the covered-timeout template:
+        the SAME compiled executor re-dispatches with the culprit's
+        copies masked out of the include weights (bit-identical output,
+        jit cache untouched); past the S budget the culprit is demoted
+        via FaultAbort."""
+        from repro.faults.chaos import FaultAbort, FaultSpec
+        from repro.faults.integrity import corrupt_result
+        from .executor import refresh_include
+
+        inj = self.fault_injector
+        bad_set = set(bad)
+        if inj is not None:
+            for spec in inj.take(t, kinds=("result_corruption",)):
+                n = int(spec.worker)
+                row = (self._first_winner_row(entry, bad_set, n)
+                       if n in self._membership else None)
+                if row is None:
+                    inj.record(spec, "noop",
+                               f"worker {n} delivers no output rows "
+                               f"this step")
+                    continue
+                # The fetched output may be a read-only device view.
+                y = np.array(y)
+                corrupt_result(y, row)
+                self._live_result_specs[n] = spec
+        chk = self._integrity
+        if chk is None or not chk.linear or not self._verifying(t):
+            return y, durations, tuple(sorted(bad_set))
+        if chk.check_output(t, y, w):
+            return y, durations, tuple(sorted(bad_set))
+        bad_chunks = chk.locate(t, y, w)
+        culprits = self._chunk_winners(entry, bad_set, bad_chunks)
+        culprits -= bad_set
+        if not culprits:
+            # Defensive: a tripped sketch with no attributable producer.
+            # Abort with nothing demoted — the engine's recovery loop
+            # re-executes the step (the injection, being one-shot, is
+            # already consumed).
+            raise FaultAbort(
+                t, "result_corruption", lost=(), demote=(),
+                detail="sketch failure with no attributable producer")
+        newly_gray = self._note_quarantine(t, culprits)
+        lost = tuple(sorted(culprits))
+        bad_new = bad_set | culprits
+        if not self._coverable(entry, bad_new):
+            for n in lost:
+                spec = self._live_result_specs.pop(n, None) or FaultSpec(
+                    "result_corruption", max(t, 0), worker=n)
+                if inj is not None:
+                    inj.record(
+                        spec, "demoted",
+                        f"step {t}: corrupt output rows from worker {n} "
+                        f"exceed S={entry.stragglers}; abort, demote, "
+                        f"replan, re-execute")
+            raise FaultAbort(
+                t, "result_corruption", lost=lost, demote=lost,
+                detail=f"S={entry.stragglers} cannot cover corrupt "
+                       f"worker(s) {list(lost)}")
+        slot_d, off_d, goff_d, _inc0, nblk_d = entry.dev
+        include_d = self._jnp.asarray(refresh_include(
+            entry.block, entry.step_plan.plan, tuple(sorted(bad_new))))
+        y2 = self._executor(
+            self._staged_dev,
+            slot_d, off_d, goff_d, include_d, nblk_d,
+            self._jnp.asarray(w),
+        )
+        y2.block_until_ready()
+        self.device_dispatches += 1
+        y = np.asarray(y2)
+        durations = {n: d for n, d in durations.items()
+                     if n not in culprits}
+        self.integrity["quarantined"] += len(culprits)
+        for n in lost:
+            spec = self._live_result_specs.pop(n, None) or FaultSpec(
+                "result_corruption", max(t, 0), worker=n)
+            if inj is not None:
+                inj.record(
+                    spec, "quarantined",
+                    f"step {t}: worker {n}'s output rows failed the "
+                    f"Freivalds sketch; masked and re-dispatched without "
+                    f"it, timing censored"
+                    + (", graylisted" if n in newly_gray else ""))
+        if not chk.check_output(t, y, w):  # pragma: no cover - belt
+            raise FaultAbort(
+                t, "result_corruption", lost=lost, demote=lost,
+                detail="re-dispatched output still fails the sketch")
+        return y, durations, tuple(sorted(bad_new))
+
+    def _integrity_window(
+        self,
+        base: int,
+        n_active: int,
+        metas,
+        sets,
+        ys: np.ndarray,
+        ws: np.ndarray,
+    ) -> List[Set[int]]:
+        """Fused-window corruption seam (post-fetch): inject scheduled
+        ``result_corruption`` into each active step's fetched output,
+        Freivalds-check each step, and repair corrupt row chunks by
+        recomputing them from a surviving replica holder's staged tile
+        (float64, exact on the integer grid) — the realized include is
+        baked into the already-dispatched graph, and a stepwise fallback
+        would break the one-compiled-program contract. The device carry
+        is computed from the device partials, which the (host-side)
+        corruption never touched, so subsequent windows stay clean.
+        Returns the per-step quarantined sets (censored from the EWMA)."""
+        from repro.faults.chaos import FaultAbort, FaultSpec
+        from repro.faults.integrity import corrupt_result
+
+        inj = self.fault_injector
+        chk = self._integrity
+        out: List[Set[int]] = [set() for _ in range(n_active)]
+        for k in range(n_active):
+            tk = base + k
+            entry = metas[k][1]
+            rspecs = metas[k][8]
+            bad_set = set(sets[k])
+            for spec in rspecs:
+                n = int(spec.worker)
+                row = (self._first_winner_row(entry, bad_set, n)
+                       if n in metas[k][0] else None)
+                if row is None:
+                    if inj is not None:
+                        inj.record(spec, "noop",
+                                   f"worker {n} delivers no output rows "
+                                   f"this step")
+                    continue
+                corrupt_result(ys[k], row)
+                self._live_result_specs[n] = spec
+            if chk is None or not chk.linear or not self._verifying(tk):
+                continue
+            if chk.check_output(tk, ys[k], ws[k]):
+                continue
+            bad_chunks = chk.locate(tk, ys[k], ws[k])
+            culprits = self._chunk_winners(entry, bad_set, bad_chunks)
+            culprits -= bad_set
+            if not culprits:  # pragma: no cover - defensive
+                raise FaultAbort(
+                    tk, "result_corruption", lost=(), demote=(),
+                    detail="sketch failure with no attributable producer")
+            newly_gray = self._note_quarantine(tk, culprits)
+            alive = set(metas[k][0]) - culprits
+            for c in bad_chunks:
+                owners = self._chunk_winners(entry, bad_set, [c])
+                owner = sorted(owners)[0] if owners else -1
+                g = (c * self.cfg.block_rows) // self.rows_per_tile
+                donor = chk.find_donor(
+                    self._staged.staged, g, owner, alive)
+                if donor is None:
+                    lost = tuple(sorted(culprits))
+                    raise FaultAbort(
+                        tk, "result_corruption", lost=lost, demote=lost,
+                        detail=f"no clean replica holder covers tile {g}")
+                fixed = chk.replica_recompute(
+                    self._staged.staged, donor, c, ws[k],
+                    self.rows_per_tile)
+                ys[k][chk.chunk_rows(c)] = fixed.astype(ys.dtype)
+                self.integrity["repaired_rows"] += self.cfg.block_rows
+            self.integrity["quarantined"] += len(culprits)
+            for n in sorted(culprits):
+                spec = self._live_result_specs.pop(n, None) or FaultSpec(
+                    "result_corruption", max(tk, 0), worker=n)
+                if inj is not None:
+                    inj.record(
+                        spec, "quarantined",
+                        f"step {tk}: worker {n}'s rows failed the "
+                        f"Freivalds sketch inside a fused window; "
+                        f"recomputed from a replica holder's tile, "
+                        f"timing censored"
+                        + (", graylisted" if n in newly_gray else ""))
+            out[k] |= culprits
+            if not chk.check_output(tk, ys[k], ws[k]):  # pragma: no cover
+                raise RuntimeError(
+                    f"step {tk}: repaired window output still fails the "
+                    f"integrity sketch")
+        return out
+
     def _step_first(
         self,
         w: np.ndarray,
@@ -1160,6 +1616,9 @@ class ElasticRunner:
             silent |= set(timed)
             for n in timed:
                 durations.pop(n, None)
+        parts = [np.asarray(p) for p in parts_d]
+        silent, durations = self._integrity_first(
+            t, entry, parts, loaded, w, silent, durations, injected)
         forced = tuple(sorted(silent))
         if injected is None:
             realized = self._derive_realized(durations, forced=forced)
@@ -1169,8 +1628,7 @@ class ElasticRunner:
         # segment lost every holder, exactly like the barrier path.
         include = refresh_include(
             entry.block, entry.step_plan.plan, realized)
-        y = self._winner_combine(
-            [np.asarray(p) for p in parts_d], loaded, entry, include)
+        y = self._winner_combine(parts, loaded, entry, include)
 
         self._pending_loads = {
             n: float(entry.block_loads[n]) for n in durations
@@ -1240,6 +1698,12 @@ class ElasticRunner:
             self.apply_event(event)
         t = self._step
         self._consult_planning_faults(t)
+        # Tile corruption fires (and is audited + re-staged) BEFORE the
+        # dispatch touches the staged bits: repair is a host copy from a
+        # replica holder, uniform across arrival modes.
+        self._consume_tile_corruption(t)
+        if self._verifying(t):
+            self._audit_and_restage(t)
         t0 = time.perf_counter()
         # Feed last step's measured durations into the EWMA (Alg. 1 line 4)
         # BEFORE planning, so the plan sees the freshest estimates.
@@ -1257,6 +1721,13 @@ class ElasticRunner:
             peek, _ = self._plan_for(self._membership)
             lost = self._resolve_lost(t, peek, dfaults, injected)
         entry, cache_hit, replanned, waste = self._adopt_plan()
+        gray = self._graylist_forced(
+            t, entry, set(injected or ()) | set(lost))
+        if gray:
+            # Probation: a graylisted worker is a forced realized
+            # straggler — excluded from the combine and the EWMA, plan
+            # (and bits) untouched.
+            lost = tuple(sorted(set(lost) | gray))
         if self.cfg.arrival == "first":
             return self._step_first(
                 w, entry, cache_hit, replanned, waste, t0, injected, lost)
@@ -1308,6 +1779,8 @@ class ElasticRunner:
             y = np.asarray(y)
             durations = {n: d for n, d in durations.items()
                          if n not in set(timed)}
+        y, durations, bad = self._integrity_barrier(
+            t, entry, y, w, bad, durations)
         # The EWMA is fed tile-unit loads (the LP's unit), so estimated
         # speeds stay consistent with the planner; clocks see row units.
         self._pending_loads = {
@@ -1485,12 +1958,31 @@ class ElasticRunner:
             # cleanly (FaultAbort) with the carry untouched — the engine
             # demotes, replans, and re-assembles from this window's head.
             self._consult_planning_faults(tk)
+            # Tile corruption fires (and is audited + re-staged) at
+            # assembly, BEFORE the window dispatches: the engine breaks
+            # windows at fault steps, so a corrupt tile always lands at
+            # a window head and the repair reaches the device copy.
+            self._consume_tile_corruption(tk)
+            if self._verifying(tk):
+                self._audit_and_restage(tk)
             dfaults = self._take_dispatch_faults(tk)
+            # Result corruption is consumed at assembly but applied (and
+            # detected) post-fetch — the injection perturbs the fetched
+            # host copy, as a corrupt wire transfer would.
+            rspecs = (
+                () if self.fault_injector is None
+                else tuple(self.fault_injector.take(
+                    tk, kinds=("result_corruption",)))
+            )
             forced: Tuple[int, ...] = ()
             if dfaults:
                 peek, _ = self._plan_for(self._membership)
                 forced = self._resolve_lost(tk, peek, dfaults, sets[k])
             entry, cache_hit, replanned, waste = self._adopt_plan()
+            gray = self._graylist_forced(
+                tk, entry, set(forced) | set(sets[k] or ()))
+            if gray:
+                forced = tuple(sorted(set(forced) | gray))
             had_miss = had_miss or not cache_hit
             durs_k = None
             if sets[k] is None:
@@ -1527,7 +2019,8 @@ class ElasticRunner:
                 entry.step_plan.plan.include_mask(sets[k])
                 bad[k, list(sets[k])] = True
             metas.append((self._membership, entry, replanned, cache_hit,
-                          time.perf_counter() - t0, waste, durs_k, forced))
+                          time.perf_counter() - t0, waste, durs_k, forced,
+                          rspecs))
         # Pad inactive tail slots with the last entry's arrays (masked out
         # in-graph) so the window's shapes never change. The stacked plan
         # buffers are cached ON DEVICE in a small LRU keyed by the
@@ -1588,6 +2081,12 @@ class ElasticRunner:
         wall = max(wall - pre_s, 1e-9)
         ys = np.asarray(ys_d)[:n_active]
         ws = np.asarray(ws_d)[:n_active]
+        if self._integrity is not None or self.fault_injector is not None:
+            # The integrity seam injects / repairs rows in place; a device
+            # fetch view is read-only, so give it a writable copy.
+            ys = np.array(ys)
+        quarantined = self._integrity_window(
+            base, n_active, metas, sets, ys, ws)
 
         # Per-window per-worker times: the window wall divided over its
         # active steps is the per-step equivalent the EWMA expects — speeds
@@ -1612,6 +2111,10 @@ class ElasticRunner:
                     # Censor silent workers (covered faults): their result
                     # — and therefore their measurement — never arrived.
                     durs.pop(n, None)
+            for n in quarantined[k]:
+                # Censor quarantined workers: a corrupt result's timing
+                # is as untrustworthy as its payload.
+                durs.pop(n, None)
             per_step_durs.append(durs)
             if self._take_speed_loss(base + k):
                 # This step's report was lost in transit: its durations
@@ -1630,7 +2133,7 @@ class ElasticRunner:
 
         reports = []
         for k, (avail, entry, replanned, cache_hit, replan_s, waste, _d,
-                _f) in enumerate(metas):
+                _f, _r) in enumerate(metas):
             self._step += 1
             durs = per_step_durs[k]
             if self.cfg.arrival == "first":

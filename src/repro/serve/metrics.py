@@ -50,6 +50,13 @@ class ServerMetrics:
         self.backoff_polls = 0
         self.shed_events = 0
         self.restored_events = 0
+        # Integrity telemetry (the server's Freivalds window audit; kept
+        # separate from the fault counters — an audit failure is a
+        # *detected-wrong-bits* event, not an announced fault).
+        self.integrity_checks = 0
+        self.integrity_failures = 0
+        self.integrity_requeued = 0
+        self.integrity_failed = 0
         self.batches = 0
         self.batch_requests: List[int] = []
         self.batch_cols_used: List[int] = []
@@ -89,6 +96,19 @@ class ServerMetrics:
         self.faults += 1
         self.requeued += int(requeued)
         self.failed += int(failed)
+
+    def on_integrity_check(self, ok: bool) -> None:
+        """One Freivalds audit of a dispatched batch's result."""
+        self.integrity_checks += 1
+        if not ok:
+            self.integrity_failures += 1
+
+    def on_integrity_requeue(self, requeued: int, failed: int) -> None:
+        """A failed audit discarded the batch's result: ``requeued``
+        requests retry (idempotently, through the ordinary head-requeue
+        machinery), ``failed`` exhausted their budget."""
+        self.integrity_requeued += int(requeued)
+        self.integrity_failed += int(failed)
 
     def on_backoff(self) -> None:
         """A poll refused to dispatch because the queue head's
@@ -181,5 +201,11 @@ class ServerMetrics:
                 "backoff_polls": self.backoff_polls,
                 "shed_events": self.shed_events,
                 "restored_events": self.restored_events,
+            },
+            "integrity": {
+                "checks": self.integrity_checks,
+                "failures": self.integrity_failures,
+                "requeued": self.integrity_requeued,
+                "failed": self.integrity_failed,
             },
         }

@@ -41,7 +41,7 @@ import math
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -123,6 +123,14 @@ class ServeConfig:
       still cover and keeps serving — degraded fault tolerance instead
       of unavailability — restoring the configured S when the fleet
       recovers.
+    verify_results: end-to-end result integrity of the linear lane.
+      ``"always"`` Freivalds-audits every coalesced window's result
+      (``O(rows + cols)`` per column — no recompute) before any response
+      is emitted; a failed audit discards the window and requeues its
+      requests idempotently through the ordinary head-requeue/backoff
+      machinery, counted under the snapshot's ``integrity`` section
+      (NOT as a fault — wrong bits are a different failure class than
+      an announced abort). ``"off"`` trusts the fleet.
     """
 
     batch_cols: int = 8
@@ -132,6 +140,7 @@ class ServeConfig:
     max_retries: int = 2
     retry_backoff: float = 0.0
     degraded: str = "stall"
+    verify_results: str = "off"
 
     def __post_init__(self):
         if self.batch_cols < 1:
@@ -149,6 +158,10 @@ class ServeConfig:
         if self.degraded not in ("stall", "shed"):
             raise ValueError(
                 f"degraded must be 'stall' or 'shed', got {self.degraded!r}")
+        if self.verify_results not in ("off", "always"):
+            raise ValueError(
+                f"verify_results must be 'off' or 'always', got "
+                f"{self.verify_results!r}")
 
 
 class ElasticServer:
@@ -221,6 +234,19 @@ class ElasticServer:
         self.fault_injector = fault_injector
         if fault_injector is not None:
             self._lanes["linear"].runner.fault_injector = fault_injector
+        self._auditor = None
+        self._audit_count = 0
+        if serve_cfg.verify_results != "off":
+            from repro.faults.integrity import IntegrityChecker
+
+            # Sketch-only (no staged replica array): the server audits
+            # end-to-end — whatever path produced the window, its result
+            # must satisfy r·y == (r·X)·w. Arbitrary float data, so the
+            # tolerance comparison (the injected corruption's shift is
+            # scaled past it by construction).
+            self._auditor = IntegrityChecker(
+                data, staged=None, block_rows=engine_cfg.block_rows,
+                linear=True, exact=False)
         self._base_stragglers = {
             name: eng.runner.planning_master.stragglers
             for name, eng in self._lanes.items()
@@ -415,6 +441,15 @@ class ElasticServer:
         except FaultAbort as fa:
             return self._on_fault(batch, fa, t_dispatch)
         self._drain_demotions(engine)
+        if self._auditor is not None and batch.kind == "linear":
+            # End-to-end window audit BEFORE any response is emitted: a
+            # result that fails the sketch never reaches a client.
+            self._audit_count += 1
+            ok = self._auditor.check_output(
+                self._audit_count, np.asarray(result), batch.operand)
+            self.metrics.on_integrity_check(ok)
+            if not ok:
+                return self._on_integrity_failure(batch, t_dispatch)
         modeled = self.cfg.latency_scale * float(
             sum(r.modeled_completion for r in reports))
         if hasattr(self.clock, "advance"):
@@ -459,6 +494,33 @@ class ElasticServer:
         when ``retry_backoff`` is set."""
         if fa.demote:
             self.feed_event(preempted=fa.demote)
+        out, kept = self._requeue_batch(
+            batch, now,
+            {"fault": fa.kind, "step": fa.step, "lost": list(fa.lost)})
+        self.metrics.on_fault(requeued=kept, failed=len(out))
+        return out
+
+    def _on_integrity_failure(self, batch: Batch,
+                              now: float) -> List[Response]:
+        """The window's result failed the Freivalds audit: wrong bits
+        from SOME producer, with no announced fault to blame. The result
+        is discarded — no response was emitted, the dispatch consumed no
+        request state — and the batch requeues through the same
+        idempotent head-requeue/backoff machinery an abort uses, under
+        the same retry budget. Deliberately NOT counted as a fault
+        (``tests`` pin the fault section's shape); the snapshot's
+        ``integrity`` section carries these."""
+        out, kept = self._requeue_batch(
+            batch, now, {"integrity": "audit_failure"})
+        self.metrics.on_integrity_requeue(requeued=kept, failed=len(out))
+        return out
+
+    def _requeue_batch(self, batch: Batch, now: float,
+                       fail_meta: Dict) -> Tuple[List[Response], int]:
+        """Shared discard-and-retry tail of both recovery paths: bump
+        each request's retry count, answer ``"failed"`` past the budget,
+        stamp backoff on the survivors, and put them back at the queue
+        head in order. Returns (failed responses, requeued count)."""
         out: List[Response] = []
         kept: List[Request] = []
         for req in batch.requests:
@@ -468,9 +530,7 @@ class ElasticServer:
                 out.append(Response(
                     rid=req.rid, kind=req.kind, status="failed",
                     t_enqueue=req.t_enqueue,
-                    meta={"fault": fa.kind, "step": fa.step,
-                          "lost": list(fa.lost),
-                          "retries": req.retries},
+                    meta=dict(fail_meta, retries=req.retries),
                 ))
             else:
                 if self.cfg.retry_backoff > 0:
@@ -478,8 +538,7 @@ class ElasticServer:
                         2.0 ** (req.retries - 1))
                 kept.append(req)
         self._queue.extendleft(reversed(kept))
-        self.metrics.on_fault(requeued=len(kept), failed=len(out))
-        return out
+        return out, len(kept)
 
     def _drain_demotions(self, engine: ElasticEngine) -> None:
         """Covered crashes mask the step but still kill the worker: the

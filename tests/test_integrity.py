@@ -1,0 +1,579 @@
+"""Silent-corruption defense: Freivalds result checks, tile fingerprints,
+quarantine/graylist, and the bitwise-recovery proofs.
+
+Host units exercise the integrity primitives directly; the subprocess
+tests (4 forced host devices, same harness as ``test_faults.py``) prove
+the end-to-end contract: every detected corruption recovers to a run
+bitwise-equal to the clean one with the jit cache still at one entry,
+and a clean run can never trip the exact-grid check (zero false
+positives over a 200-seed sweep).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import EngineConfig, Policy
+from repro.core import make_placement
+from repro.core.scheduler import USECScheduler
+from repro.core.speed import SpeedEstimator
+from repro.faults import (
+    CORRUPTION_KINDS,
+    FAULT_KINDS,
+    GENERATE_KINDS,
+    SAMPLE_PERIOD,
+    ChaosPlan,
+    FaultSpec,
+    IntegrityChecker,
+    WorkerHealth,
+    censor_measurements,
+    should_verify,
+    tile_checksum,
+)
+from repro.faults.integrity import corrupt_result, corrupt_tile
+from repro.runtime import RunnerConfig, make_exact_matrix
+from repro.runtime.checkpoint import (
+    CheckpointCorruptError,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.elastic_runner import quantize_unit
+from repro.serve import ServeConfig
+
+from conftest import run_with_devices
+
+
+# ---------------------------------------------------------------------- #
+# Fault-kind catalog and spec validation
+# ---------------------------------------------------------------------- #
+def test_corruption_kinds_in_catalog_but_not_generate_default():
+    assert set(CORRUPTION_KINDS) == {"tile_corruption", "result_corruption"}
+    assert set(CORRUPTION_KINDS) <= set(FAULT_KINDS)
+    # Opt-in only: a default generate() schedule never draws corruption
+    # (injecting it without verify_results on silently corrupts results).
+    assert not set(CORRUPTION_KINDS) & set(GENERATE_KINDS)
+    plan = ChaosPlan.generate(100, 4, n_faults=20, seed=7)
+    assert not any(f.kind in CORRUPTION_KINDS for f in plan)
+
+
+def test_corruption_specs_are_worker_addressed():
+    for kind in CORRUPTION_KINDS:
+        with pytest.raises(ValueError, match="needs worker="):
+            FaultSpec(kind, 3)
+        spec = FaultSpec(kind, 3, worker=2)
+        assert spec.worker == 2
+    with pytest.raises(ValueError, match="kind must be one of"):
+        FaultSpec("bit_gremlin", 0)
+    with pytest.raises(ValueError, match="step must be >= 0"):
+        FaultSpec("result_corruption", -1, worker=0)
+
+
+def test_chaos_plan_rejects_duplicate_specs():
+    dup = FaultSpec("result_corruption", 3, worker=1)
+    with pytest.raises(ValueError, match=r"duplicate fault spec \(step=3, "
+                                         r"worker=1, kind='result_corruption'"):
+        ChaosPlan([dup, FaultSpec("result_corruption", 3, worker=1)])
+    # Same step, different worker or kind: fine.
+    ChaosPlan([dup, FaultSpec("result_corruption", 3, worker=2),
+               FaultSpec("tile_corruption", 3, worker=1)])
+
+
+def test_generate_draws_corruption_kinds_when_asked():
+    plan = ChaosPlan.generate(40, 4, n_faults=10,
+                              kinds=CORRUPTION_KINDS, seed=3)
+    assert len(plan) == 10
+    for f in plan:
+        assert f.kind in CORRUPTION_KINDS
+        assert f.worker is not None and 0 <= f.worker < 4
+    # Seed-deterministic, bit for bit.
+    again = ChaosPlan.generate(40, 4, n_faults=10,
+                               kinds=CORRUPTION_KINDS, seed=3)
+    assert plan.faults == again.faults
+
+
+# ---------------------------------------------------------------------- #
+# verify_results knob validation (every layer)
+# ---------------------------------------------------------------------- #
+def test_verify_results_validates_at_every_layer():
+    for mode in ("off", "sample", "always"):
+        Policy(verify_results=mode)
+        RunnerConfig(verify_results=mode)
+        EngineConfig(verify_results=mode)
+    EngineConfig(verify_results=None)        # None = inherit the policy's
+    with pytest.raises(ValueError, match="verify_results"):
+        Policy(verify_results="sometimes")
+    with pytest.raises(ValueError, match="verify_results"):
+        RunnerConfig(verify_results="sometimes")
+    with pytest.raises(ValueError, match="verify_results"):
+        EngineConfig(verify_results="sometimes")
+    ServeConfig(verify_results="always")
+    with pytest.raises(ValueError, match="verify_results"):
+        ServeConfig(verify_results="sample")  # serve audits all or nothing
+
+
+def test_should_verify_cadence():
+    assert all(should_verify("always", t) for t in range(10))
+    assert not any(should_verify("off", t) for t in range(10))
+    sampled = [t for t in range(2 * SAMPLE_PERIOD + 1)
+               if should_verify("sample", t)]
+    assert sampled == [0, SAMPLE_PERIOD, 2 * SAMPLE_PERIOD]
+
+
+# ---------------------------------------------------------------------- #
+# Freivalds checker (host, exact grid)
+# ---------------------------------------------------------------------- #
+def _checker(dim=128, seed=0, **kw):
+    x = make_exact_matrix(dim, seed)
+    return x, IntegrityChecker(x, block_rows=16, **kw)
+
+
+def test_freivalds_detects_and_localizes_single_element_shift():
+    x, chk = _checker()
+    rng = np.random.default_rng(1)
+    w = quantize_unit(rng.standard_normal(128))
+    y = x.astype(np.float64) @ w
+    assert chk.check_output(0, y, w)
+    bad = np.array(y)
+    corrupt_result(bad, 37)                 # one element, chunk 37//16 == 2
+    assert not chk.check_output(0, bad, w)
+    assert chk.locate(0, bad, w) == [2]
+    # Per-worker chunk check (the first-arrival seam) sees it too — and
+    # clears the chunks the corruption did not touch.
+    assert not chk.check_chunks(1, bad, w, chunks=[2, 5])
+    assert chk.check_chunks(1, bad, w, chunks=[0, 1, 3])
+    assert chk.counters()["sketch_failures"] == 2   # locate() is not a check
+    assert chk.chunk_rows(2) == slice(32, 48)
+
+
+def test_freivalds_matmat_and_nonlinear_passthrough():
+    x, chk = _checker()
+    rng = np.random.default_rng(2)
+    w = rng.integers(-3, 4, size=(128, 5)).astype(np.float64)
+    y = x.astype(np.float64) @ w
+    assert chk.check_output(3, y, w)
+    bad = np.array(y)
+    bad[50, 4] += 1000.0
+    assert not chk.check_output(3, bad, w)
+    assert chk.locate(3, bad, w) == [50 // 16]
+    # Non-linear workloads are out of Freivalds' scope: always pass.
+    nl = IntegrityChecker(x, block_rows=16, linear=False)
+    assert nl.check_output(0, bad, w) and nl.locate(0, bad, w) == []
+
+
+def test_freivalds_clean_sweep_zero_false_positives_200_seeds():
+    """Acceptance: on the exact-integer grid the == comparison can never
+    trip on a clean result — 200 seeded operands, every sketch, zero
+    failures."""
+    x, chk = _checker()
+    x64 = x.astype(np.float64)
+    for seed in range(200):
+        rng = np.random.default_rng(seed)
+        if seed % 5 == 4:
+            w = rng.integers(-3, 4, size=(128, 3)).astype(np.float64)
+        else:
+            w = quantize_unit(rng.standard_normal(128)).astype(np.float64)
+        assert chk.check_output(seed, x64 @ w, w), seed
+    assert chk.counters() == {"checks": 200, "sketch_failures": 0,
+                              "tile_audits": 0}
+
+
+def test_freivalds_tolerance_mode_off_grid():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((128, 128)).astype(np.float32)
+    chk = IntegrityChecker(x, block_rows=16, exact=False, rel_tol=1e-3)
+    w = rng.standard_normal(128)
+    y = x.astype(np.float64) @ w
+    # float32 rounding noise stays inside the scaled tolerance...
+    assert chk.check_output(0, np.asarray(x @ w.astype(np.float32)), w)
+    # ...but corrupt_result's shift is scaled past it by construction.
+    bad = np.array(y)
+    corrupt_result(bad, 7)
+    assert not chk.check_output(0, bad, w)
+
+
+# ---------------------------------------------------------------------- #
+# Tile fingerprints (host)
+# ---------------------------------------------------------------------- #
+def test_tile_checksum_and_corrupt_helpers():
+    rng = np.random.default_rng(0)
+    tile = rng.standard_normal((16, 32)).astype(np.float32)
+    before = tile_checksum(tile)
+    shape, dtype = tile.shape, tile.dtype
+    corrupt_tile(tile)
+    assert tile.shape == shape and tile.dtype == dtype
+    assert tile_checksum(tile) != before        # bytes drifted, silently
+    y = np.arange(8, dtype=np.float32)
+    corrupt_result(y, 3)
+    assert y[3] != 3.0 and np.all(np.delete(y, 3) == np.delete(
+        np.arange(8, dtype=np.float32), 3))
+
+
+def test_tile_audit_names_corrupt_replica_and_finds_donor():
+    x = make_exact_matrix(128, 0)
+    n_machines, n_tiles, rows_per_tile = 4, 8, 16
+    place = make_placement("cyclic", n_machines, n_tiles, 3)
+    slot_of = np.full((n_machines, n_tiles), -1, dtype=np.int64)
+    staged = np.zeros((n_machines, 6, rows_per_tile, 128), dtype=np.float32)
+    for g, holders in enumerate(place.holders):
+        for m in holders:
+            s = int(np.sum(slot_of[m] >= 0))
+            slot_of[m, g] = s
+            staged[m, s] = x[g * rows_per_tile:(g + 1) * rows_per_tile]
+    chk = IntegrityChecker(x, staged=staged, slot_of=slot_of,
+                           holders=place.holders, block_rows=16)
+    assert chk.audit_tiles(staged) == []
+    # Rot worker 1's replica of some tile it holds.
+    g = int(np.flatnonzero(slot_of[1] >= 0)[0])
+    s = int(slot_of[1, g])
+    corrupt_tile(staged[1, s])
+    assert chk.audit_tiles(staged) == [(1, s, g)]
+    donor = chk.find_donor(staged, g, exclude=1, alive=range(4))
+    assert donor is not None and donor != 1
+    chk.restage(staged, 1, s, g, donor)
+    assert chk.audit_tiles(staged) == []        # fingerprint matches again
+    # No donor when every other holder is gone (or also corrupt).
+    corrupt_tile(staged[1, s])
+    assert chk.find_donor(staged, g, exclude=1, alive=[1]) is None
+
+
+def test_replica_recompute_matches_host_reference():
+    x = make_exact_matrix(128, 0)
+    rows_per_tile = 32
+    slot_of = np.zeros((1, 4), dtype=np.int64)
+    slot_of[0] = [0, 1, 2, 3]
+    staged = x.reshape(1, 4, rows_per_tile, 128)
+    chk = IntegrityChecker(x, staged=staged, slot_of=slot_of,
+                           holders=[(0,), (0,), (0,), (0,)], block_rows=16)
+    w = quantize_unit(np.random.default_rng(5).standard_normal(128))
+    out = chk.replica_recompute(staged, donor=0, chunk=3, w=w,
+                                rows_per_tile=rows_per_tile)
+    ref = x.astype(np.float64)[48:64] @ w.astype(np.float64)
+    assert np.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------- #
+# Worker health / quarantine (host)
+# ---------------------------------------------------------------------- #
+def test_worker_health_graylist_and_probation():
+    h = WorkerHealth(graylist_after=2, probation=4)
+    assert not h.strike(3, step=5)              # first strike: warning only
+    assert h.graylisted(6) == set()
+    assert h.strike(3, step=7)                  # second strike: graylisted
+    assert h.graylisted(8) == {3}
+    assert h.graylisted(11) == {3}              # until step 7 + 1 + 4
+    assert h.graylisted(12) == set()            # probation lapsed...
+    assert h.strikes.get(3, 0) == 0             # ...with a clean slate
+    with pytest.raises(ValueError, match="graylist_after"):
+        WorkerHealth(graylist_after=0)
+
+
+def test_censor_measurements_drops_only_quarantined():
+    loads = {0: 10.0, 1: 20.0, 2: 30.0}
+    durs = {0: 1.0, 1: 2.0, 2: 3.0}
+    cl, cd = censor_measurements(loads, durs, {1})
+    assert cl == {0: 10.0, 2: 30.0} and cd == {0: 1.0, 2: 3.0}
+    assert loads[1] == 20.0                     # inputs untouched
+    assert censor_measurements(loads, durs, ()) == (loads, durs)
+
+
+@given(seed=st.integers(0, 10 ** 6), quarantined=st.integers(0, 3),
+       gamma=st.floats(0.1, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_censoring_is_bit_identical_to_never_measuring(seed, quarantined,
+                                                       gamma):
+    """Property (acceptance): the EWMA update and the scheduler's c*
+    pricing are bit-identical whether the quarantined worker's timings
+    are censored via ``measure(exclude=)`` or simply never existed —
+    corruption can never skew a future plan."""
+    rng = np.random.default_rng(seed)
+    base = [1000.0, 1400.0, 1900.0, 2600.0]
+    loads = {n: float(rng.uniform(10, 100)) for n in range(4)}
+    durs = {n: float(rng.uniform(0.01, 1.0)) for n in range(4)}
+    est_a = SpeedEstimator(base, gamma=gamma)
+    est_b = SpeedEstimator(base, gamma=gamma)
+    est_a.update(est_a.measure(loads, durs, exclude={quarantined}))
+    cl, cd = censor_measurements(loads, durs, {quarantined})
+    est_b.update(est_b.measure(cl, cd))
+    assert np.array_equal(est_a.speeds, est_b.speeds)
+    # Same speeds, same LP: the lookahead pricing agrees bit for bit.
+    place = make_placement("cyclic", 4, 8, 3)
+    pa = USECScheduler(place, 16, est_a.speeds, stragglers=1)
+    pb = USECScheduler(place, 16, est_b.speeds, stragglers=1)
+    avail = [n for n in range(4) if n != quarantined] or [0, 1, 2, 3]
+    assert pa.probe_c_star(avail) == pb.probe_c_star(avail)
+    assert pa.probe_c_star(range(4)) == pb.probe_c_star(range(4))
+
+
+# ---------------------------------------------------------------------- #
+# Checkpoint hardening (host, tmp_path)
+# ---------------------------------------------------------------------- #
+def _save_tree(tmp_path):
+    tree = {"w": np.arange(64, dtype=np.float32),
+            "speeds": np.array([1.0, 2.0], dtype=np.float64)}
+    path = save_checkpoint(str(tmp_path), 7, tree, extra={"k": 1})
+    return tree, path
+
+
+def test_checkpoint_roundtrip_records_and_verifies_crc32(tmp_path):
+    tree, path = _save_tree(tmp_path)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert all("crc32" in e for e in manifest["leaves"])
+    step, restored, extra = restore_checkpoint(path, tree)
+    assert step == 7 and extra == {"k": 1}
+    assert np.array_equal(restored["w"], tree["w"])
+
+
+def test_checkpoint_byte_flip_raises_naming_the_file(tmp_path):
+    tree, path = _save_tree(tmp_path)
+    leaf = os.path.join(path, "leaf_00001.npz")       # key "w" sorts second
+    blob = bytearray(open(leaf, "rb").read())
+    blob[len(blob) // 2] ^= 0x40                      # one silent bit flip
+    open(leaf, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptError, match="leaf_00001.npz"):
+        restore_checkpoint(path, tree)
+
+
+def test_checkpoint_truncation_and_garbage_manifest_raise(tmp_path):
+    tree, path = _save_tree(tmp_path)
+    leaf = os.path.join(path, "leaf_00000.npz")
+    blob = open(leaf, "rb").read()
+    open(leaf, "wb").write(blob[: len(blob) // 2])    # truncated shard
+    with pytest.raises(CheckpointCorruptError, match="leaf_00000.npz"):
+        restore_checkpoint(path, tree)
+    open(os.path.join(path, "manifest.json"), "w").write("{not json")
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        restore_checkpoint(path, tree)
+
+
+def test_pre_fingerprint_checkpoints_still_restore(tmp_path):
+    """Backward compatibility: a manifest without crc32 keys (older
+    save format) restores without the integrity check."""
+    tree, path = _save_tree(tmp_path)
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    for e in manifest["leaves"]:
+        del e["crc32"]
+    json.dump(manifest, open(mpath, "w"))
+    step, restored, _ = restore_checkpoint(path, tree)
+    assert step == 7 and np.array_equal(restored["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------- #
+# End-to-end recovery proofs (subprocess, 4 forced host devices)
+# ---------------------------------------------------------------------- #
+# Worker choice matters: under BASE speeds with cyclic placement,
+# replication 3 and S=1, worker 2 is a pure backup — the include weights
+# assign it zero output rows, so corrupting it is an honest noop. Worker
+# 3 wins rows in every mode; the grid injects there.
+_PRELUDE = """
+import numpy as np
+from repro.api import ElasticEngine, EngineConfig, MatVecPowerIteration, Policy
+from repro.faults import ChaosPlan, FaultInjector, FaultSpec
+from repro.runtime import SyntheticSpeedClock, make_exact_matrix
+
+BASE = [1000., 1400., 1900., 2600.]
+X = make_exact_matrix(4 * 96, 0)
+
+def engine(arrival="barrier", fuse=1, stragglers=1, verify="always",
+           check="exact", **cfg):
+    return ElasticEngine(
+        MatVecPowerIteration(seed=0),
+        Policy(placement="cyclic", replication=3, stragglers=stragglers,
+               verify_results=verify),
+        EngineConfig(block_rows=16, verify=check,
+                     initial_speeds=tuple(BASE), arrival=arrival,
+                     fuse_steps=fuse, **cfg),
+        backend="device", n_machines=4,
+        clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0))
+
+def run(arrival, fuse, faults=None, n_steps=8, **kw):
+    return engine(arrival=arrival, fuse=fuse, **kw).run(
+        X, n_steps=n_steps, faults=faults)
+"""
+
+
+def test_corruption_recovery_bitwise_grid_reduced():
+    """Tier-1 acceptance (reduced grid): both corruption kinds, injected
+    into a row-winning worker, recover bitwise-equal to the clean run
+    with one jit entry — and the clean runs themselves log zero sketch
+    failures (no false positives)."""
+    out = run_with_devices(_PRELUDE + """
+ACTION = {"tile_corruption": "restaged", "result_corruption": "quarantined"}
+COUNTER = {"tile_corruption": "restaged", "result_corruption": "quarantined"}
+for arrival, fuse in [("barrier", 1), ("first", 4)]:
+    clean = run(arrival, fuse)
+    assert clean.integrity["checks"] > 0
+    assert clean.integrity["sketch_failures"] == 0, (arrival, fuse)
+    for kind in ("tile_corruption", "result_corruption"):
+        plan = ChaosPlan([FaultSpec(kind, 3, worker=3)])
+        fault = run(arrival, fuse, faults=plan)
+        assert np.array_equal(fault.result.eigvec, clean.result.eigvec), \\
+            (kind, arrival, fuse)
+        assert fault.result.residuals == clean.result.residuals
+        assert fault.executor_cache_size == 1, (kind, arrival, fuse)
+        actions = [r.action for r in fault.fault_records]
+        assert actions == [ACTION[kind]], (kind, arrival, fuse, actions)
+        assert fault.integrity[COUNTER[kind]] >= 1, (kind, fault.integrity)
+        assert fault.integrity["sketch_failures"] == (
+            1 if kind == "result_corruption" else 0)
+        assert fault.recoveries == 0
+print("CORRUPTION_REDUCED_OK")
+""", n_devices=4)
+    assert "CORRUPTION_REDUCED_OK" in out
+
+
+@pytest.mark.slow
+def test_corruption_recovery_full_acceptance_grid():
+    """Nightly: the FULL kind × arrival × fuse_steps corruption grid —
+    zero false negatives, every cell bitwise."""
+    out = run_with_devices(_PRELUDE + """
+for arrival in ("barrier", "first"):
+    for fuse in (1, 4):
+        clean = run(arrival, fuse)
+        assert clean.integrity["sketch_failures"] == 0
+        for kind in ("tile_corruption", "result_corruption"):
+            plan = ChaosPlan([FaultSpec(kind, 3, worker=3)])
+            fault = run(arrival, fuse, faults=plan)
+            assert np.array_equal(fault.result.eigvec,
+                                  clean.result.eigvec), (kind, arrival, fuse)
+            assert fault.result.residuals == clean.result.residuals
+            assert fault.executor_cache_size == 1
+            assert len(fault.fault_records) == 1
+        # A seeded multi-corruption schedule per combo.
+        gen = ChaosPlan.generate(8, 4, n_faults=2, seed=fuse,
+                                 kinds=("tile_corruption",
+                                        "result_corruption"))
+        fault = run(arrival, fuse, faults=gen)
+        assert np.array_equal(fault.result.eigvec, clean.result.eigvec), \\
+            (arrival, fuse, gen)
+        assert fault.executor_cache_size == 1
+print("CORRUPTION_GRID_OK")
+""", n_devices=4)
+    assert "CORRUPTION_GRID_OK" in out
+
+
+def test_uncovered_corruption_demotes_and_repeat_offender_graylists():
+    """S=0: a corrupt result cannot be masked — the step aborts before
+    the carry mutates, the culprit is demoted, the step re-executes,
+    bits still clean. And with S=1: two strikes graylist the worker
+    (probation as a realized straggler), still bitwise."""
+    out = run_with_devices(_PRELUDE + """
+clean = run("barrier", 1, stragglers=0)
+plan = ChaosPlan([FaultSpec("result_corruption", 3, worker=3)])
+fault = run("barrier", 1, stragglers=0, faults=plan)
+assert np.array_equal(fault.result.eigvec, clean.result.eigvec)
+assert fault.result.residuals == clean.result.residuals
+assert fault.recoveries == 1 and fault.executor_cache_size == 1
+assert [r.action for r in fault.fault_records] == ["demoted"]
+assert 3 not in fault.reports[-1].available
+
+clean1 = run("barrier", 1)
+two = ChaosPlan([FaultSpec("result_corruption", 2, worker=3),
+                 FaultSpec("result_corruption", 4, worker=3)])
+fault = run("barrier", 1, faults=two)
+assert np.array_equal(fault.result.eigvec, clean1.result.eigvec)
+assert fault.integrity["quarantined"] == 2
+assert fault.integrity["graylist_events"] == 1
+assert fault.executor_cache_size == 1
+print("DEMOTE_GRAYLIST_OK")
+""", n_devices=4)
+    assert "DEMOTE_GRAYLIST_OK" in out
+
+
+def test_restage_keeps_capacity_noop_nonwinner_and_silent_without_defense():
+    """Three contracts in one fleet: (1) tile re-staging repairs the
+    replica from a surviving donor — full capacity, no demotion, no
+    churn; (2) corrupting a worker that wins no output rows is an honest
+    noop; (3) with verify_results off, the same result corruption goes
+    undetected and the output is silently wrong — the threat model this
+    subsystem exists for."""
+    out = run_with_devices(_PRELUDE + """
+clean = run("barrier", 1)
+plan = ChaosPlan([FaultSpec("tile_corruption", 3, worker=3)])
+fault = run("barrier", 1, faults=plan)
+assert np.array_equal(fault.result.eigvec, clean.result.eigvec)
+assert [r.action for r in fault.fault_records] == ["restaged"]
+assert fault.integrity["restaged"] == 1
+assert fault.result.churn_events == 0          # plan untouched, no demotion
+assert 3 in fault.reports[-1].available        # full capacity retained
+assert fault.recoveries == 0
+
+plan = ChaosPlan([FaultSpec("result_corruption", 3, worker=2)])
+fault = run("barrier", 1, faults=plan)         # worker 2: pure backup
+assert np.array_equal(fault.result.eigvec, clean.result.eigvec)
+assert [r.action for r in fault.fault_records] == ["noop"]
+assert fault.integrity["quarantined"] == 0
+
+plan = ChaosPlan([FaultSpec("result_corruption", 3, worker=3)])
+# check=None: the per-step host-reference assert is a *test* harness,
+# not a production defense — with it off and verify_results off, the
+# corruption sails through undetected.
+silent = run("barrier", 1, faults=plan, verify="off", check=None)
+assert not np.array_equal(silent.result.eigvec, clean.result.eigvec)
+assert silent.integrity["checks"] == 0         # nothing was watching
+print("RESTAGE_NOOP_SILENT_OK")
+""", n_devices=4)
+    assert "RESTAGE_NOOP_SILENT_OK" in out
+
+
+def test_serve_window_audit_requeues_and_retries_clean():
+    """Serving layer: a corrupted coalesced window fails the end-to-end
+    Freivalds audit BEFORE any response is emitted, its requests requeue
+    idempotently (integrity counters, not fault counters), and the retry
+    returns the same bits a corruption-free server produces."""
+    out = run_with_devices("""
+import numpy as np
+from repro.api import EngineConfig, Policy
+from repro.faults import ChaosPlan, FaultInjector, FaultSpec
+from repro.runtime.elastic_runner import SyntheticSpeedClock, \\
+    make_exact_matrix
+from repro.serve import ElasticServer, ServeConfig, SyntheticClock
+
+BASE = (1000., 1400., 1900., 2600.)
+X = make_exact_matrix(4 * 96, 0)
+
+def server(injector=None, verify="always"):
+    return ElasticServer(
+        X,
+        Policy(placement="cyclic", replication=3, stragglers=1),
+        EngineConfig(block_rows=16, initial_speeds=BASE),
+        ServeConfig(batch_cols=4, verify_results=verify),
+        clock=SyntheticClock(),
+        engine_clock=SyntheticSpeedClock(BASE, jitter_sigma=0.0, seed=0),
+        n_machines=4,
+        fault_injector=injector)
+
+rng = np.random.default_rng(9)
+ops = [rng.integers(-3, 4, size=X.shape[0]).astype(np.float32)
+       for _ in range(3)]
+
+ref = server()
+for op in ops:
+    ref.submit("matvec", op)
+ref_out = {r.rid: r for r in ref.drain()}
+assert all(r.status == "ok" for r in ref_out.values())
+
+inj = FaultInjector(ChaosPlan([FaultSpec("result_corruption", 0, worker=3)]))
+srv = server(injector=inj)
+for op in ops:
+    srv.submit("matvec", op)
+got = {r.rid: r for r in srv.drain()}
+assert all(r.status == "ok" for r in got.values())
+for rid, r in ref_out.items():
+    assert np.array_equal(got[rid].result, r.result), rid
+
+snap = srv.metrics_snapshot()
+integ = snap["integrity"]
+assert integ["failures"] == 1 and integ["checks"] >= 2
+assert integ["requeued"] >= 1 and integ["failed"] == 0
+# Deliberately NOT a fault: no announced failure happened.
+assert snap["faults"]["count"] == 0 and snap["faults"]["requeued"] == 0
+clean_snap = ref.metrics_snapshot()
+assert clean_snap["integrity"]["failures"] == 0
+print("SERVE_AUDIT_OK")
+""", n_devices=4)
+    assert "SERVE_AUDIT_OK" in out
